@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from
+experiments/dryrun_results.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [json] [out_md]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def fmt_s(v):
+    if v is None:
+        return "-"
+    if v >= 1:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.1f}ms"
+    return f"{v * 1e6:.0f}us"
+
+
+def render(results: list[dict], mesh_tag: str) -> list[str]:
+    rows = ["| arch | shape | kind | compile | HLO TFLOP | coll GB (#) | "
+            "temp GB | compute | mem(hi/lo) | coll | dominant | useful | "
+            "MFU(hi/lo) | note |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if r.get("mesh_tag") != mesh_tag:
+            continue
+        if "skip" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                        f"| - | - | - | SKIP | - | - | {r['skip'][:40]}… |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | - | FAIL | - | - | "
+                        f"- | - | - | - | - | - | - | {r['error'][:40]} |")
+            continue
+        rf = r["roofline"]
+        coll = r["collectives"]
+        note = ""
+        temp = (r["memory"]["temp_bytes"] or 0) / 1e9
+        if temp > 16:
+            note = "over 16G/chip (see §Perf)"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['compile_s']}s | {r['hlo_flops'] / 1e12:.2f} | "
+            f"{coll['total_bytes'] / 1e9:.1f} ({coll['total_count']}) | "
+            f"{temp:.1f} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])}/{fmt_s(rf['memory_min_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | {rf['dominant']}/"
+            f"{rf['dominant_min']} | {rf['useful_fraction']:.2f} | "
+            f"{rf['roofline_mfu']:.3f}/{rf['roofline_mfu_min']:.3f} | "
+            f"{note} |")
+    return rows
+
+
+def pick_hillclimb(results: list[dict]) -> list[str]:
+    """worst roofline fraction / most collective-bound / most representative
+    (train cell with heavy level-like scan structure)."""
+    ok = [r for r in results
+          if r.get("mesh_tag") == "1pod" and "roofline" in r]
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_mfu_min"])
+    collb = max(ok, key=lambda r: r["roofline"]["collective_s"])
+    return [f"{worst['arch']}|{worst['shape']}",
+            f"{collb['arch']}|{collb['shape']}"]
+
+
+def main():
+    src = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_results.json"
+    results = json.loads(Path(src).read_text())
+    out = []
+    for tag, title in (("1pod", "single-pod 16x16 (256 chips)"),
+                       ("2pod", "multi-pod 2x16x16 (512 chips)")):
+        out.append(f"\n### Mesh {title}\n")
+        out.extend(render(results, tag))
+    text = "\n".join(out)
+    print(text)
+    print("\nsuggested hillclimb cells:", pick_hillclimb(results))
+    if len(sys.argv) > 2:
+        Path(sys.argv[2]).write_text(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Sections:
+  table1          — paper Table I (strategy comparison, lung2/torso2)
+  level_profiles  — paper Fig. 5/6 (per-level cost profiles)
+  solver_bench    — solve wall time (CPU measured + TPU roofline model)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import level_profiles, solver_bench, table1
+    t0 = time.time()
+    print("== Table I: strategy comparison (paper values inline) ==")
+    table1.run(csv_out="experiments/table1.csv")
+    print("\n== Fig 5/6: level-cost profiles ==")
+    level_profiles.run(csv_dir="experiments")
+    print("\n== Solver wall-time (name,strategy,steps,levels,us,model_us,"
+          "speedup) ==")
+    solver_bench.run(csv_out="experiments/solver_bench.csv")
+    _roofline_summary()
+    print(f"\ntotal {time.time() - t0:.1f}s")
+
+
+def _roofline_summary() -> None:
+    """Summarize the latest dry-run roofline records, if present."""
+    import json
+    from pathlib import Path
+    src = Path("experiments/dryrun_results.json")
+    if not src.exists():
+        print("\n(no dry-run records; run repro.launch.dryrun --all "
+              "--both-meshes first)")
+        return
+    rs = [r for r in json.loads(src.read_text()) if "roofline" in r]
+    print("\n== Dry-run roofline summary (arch,shape,mesh,dominant,"
+          "useful,MFU_hi,MFU_lo) ==")
+    for r in rs:
+        rf = r["roofline"]
+        print(f"{r['arch']},{r['shape']},{r['mesh_tag']},"
+              f"{rf['dominant_min']},{rf['useful_fraction']:.2f},"
+              f"{rf['roofline_mfu']:.3f},{rf['roofline_mfu_min']:.3f}")
+    skips = [r for r in json.loads(src.read_text()) if "skip" in r]
+    print(f"cells: {len(rs)} compiled OK, {len(skips)} assignment skips")
+
+
+if __name__ == "__main__":
+    main()

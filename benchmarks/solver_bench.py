@@ -1,0 +1,85 @@
+"""Solver wall-time benchmark (the runtime table the paper omits).
+
+Measures the JAX level-scheduled solver (CPU wall time, jitted, warm) for
+no-rewriting vs avgLevelCost vs constrained strategies, plus a TPU roofline
+model: per-step cost = max(bytes/HBM_BW, flops/VPU) + step latency; the
+transformation's win is mostly the removed per-step/per-level overhead and
+barrier latency.
+
+CSV: matrix,strategy,steps,levels,us_per_solve,model_tpu_us,speedup.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AvgLevelCost, ConstrainedAvgLevelCost, NoRewrite, \
+    transform
+from repro.solver import schedule_for_csr, schedule_for_transformed, solve, \
+    to_device
+from repro.solver.levelset import solve_scan
+from repro.sparse import build_levels, generators
+from repro.sparse import io as sio
+
+HBM_BW = 819e9
+VPU_FLOPS = 4e12          # ~VPU f32 throughput per chip
+STEP_LATENCY = 2e-6       # scan-step / grid-step overhead (s)
+
+
+def tpu_model_us(sched) -> float:
+    per_step_bytes = sched.memory_bytes() / max(sched.num_steps, 1)
+    per_step_flops = sched.padded_flops() / max(sched.num_steps, 1)
+    per_step = max(per_step_bytes / HBM_BW, per_step_flops / VPU_FLOPS)
+    return (sched.num_steps * (per_step + STEP_LATENCY)) * 1e6
+
+
+def bench_one(L, name: str, scale_note: str, chunk=256, max_deps=8,
+              iters=5):
+    import jax
+    import jax.numpy as jnp
+    lv = build_levels(L)
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    rows = []
+    base_us = None
+    for strat in (NoRewrite(), AvgLevelCost(),
+                  ConstrainedAvgLevelCost(alpha=12, beta=64, coef_cap=1e8)):
+        ts = transform(L, strat, validate=False, codegen=False)
+        sched = schedule_for_transformed(ts, chunk=chunk, max_deps=max_deps)
+        c = ts.preamble(b).astype(np.float32)
+        ds = to_device(sched)
+        fn = jax.jit(lambda cc: solve_scan(ds, cc))
+        cc = jnp.asarray(c)
+        fn(cc).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(cc).block_until_ready()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        if base_us is None:
+            base_us = us
+        rows.append(f"{name}{scale_note},{ts.metrics.strategy.split('(')[0]},"
+                    f"{sched.num_steps},{sched.num_levels},{us:.0f},"
+                    f"{tpu_model_us(sched):.0f},{base_us / us:.2f}")
+    return rows
+
+
+def run(csv_out=None):
+    header = ("matrix,strategy,steps,levels,us_per_solve,model_tpu_us,"
+              "speedup_vs_norewrite")
+    rows = [header]
+    rng_mats = [
+        (generators.lung2_like(scale=0.25), "lung2_like", "@0.25"),
+        (generators.torso2_like(scale=0.15), "torso2_like", "@0.15"),
+    ]
+    for L, name, note in rng_mats:
+        rows.extend(bench_one(L, name, note))
+    out = "\n".join(rows)
+    print(out)
+    if csv_out:
+        from pathlib import Path
+        Path(csv_out).write_text(out + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Table I reproduction: strategy comparison on lung2/torso2 analogues.
+
+Emits CSV rows: matrix,strategy,num_levels,levels_red_pct,avg_cost_ratio,
+total_cost_delta_pct,code_MB,rows_rewritten + the paper's reported values
+side by side (EXPERIMENTS.md §Paper-validation).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import AvgLevelCost, ManualEveryK, NoRewrite, transform
+from repro.sparse import io as sio
+
+PAPER = {  # (levels, avg_ratio, total_delta_pct, code_MB, rows_rewritten)
+    ("lung2", "no_rewriting"): (479, 1.0, 0.0, 9.7, 0),
+    ("lung2", "avgLevelCost"): (23, 20.71, -1.0, 8.6, 1304),
+    ("lung2", "manual_every_k"): (67, 7.13, -1.0, 9.5, 898),
+    ("torso2", "no_rewriting"): (513, 1.0, 0.0, 21.0, 0),
+    ("torso2", "avgLevelCost"): (341, 1.53, 0.2, 21.0, 14655),
+    ("torso2", "manual_every_k"): (284, 2.51, 40.0, None, 18147),
+}
+
+
+def run(csv_out=None):
+    rows = ["matrix,strategy,num_levels,paper_levels,levels_red_pct,"
+            "avg_cost_ratio,paper_avg_ratio,total_cost_delta_pct,"
+            "paper_delta_pct,code_MB,paper_code_MB,rows_rewritten,"
+            "paper_rows,seconds"]
+    for name in ("lung2", "torso2"):
+        L = sio.load_named(name)
+        for strat in (NoRewrite(), AvgLevelCost(), ManualEveryK(10)):
+            t0 = time.time()
+            ts = transform(L, strat, validate=False, codegen=True)
+            dt = time.time() - t0
+            m = ts.metrics.table1_row()
+            key = (name, ts.metrics.strategy.split("(")[0])
+            p = PAPER.get(key, (None,) * 5)
+            rows.append(
+                f"{name},{m['strategy']},{m['num_levels']},{p[0]},"
+                f"{m['levels_reduction_pct']:.1f},{m['avg_cost_ratio']:.2f},"
+                f"{p[1]},{m['total_cost_delta_pct']:.1f},{p[2]},"
+                f"{m['code_MB']:.1f},{p[3]},{m['rows_rewritten']},{p[4]},"
+                f"{dt:.1f}")
+    out = "\n".join(rows)
+    print(out)
+    if csv_out:
+        from pathlib import Path
+        Path(csv_out).write_text(out + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

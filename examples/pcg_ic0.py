@@ -1,0 +1,83 @@
+"""Preconditioned CG with an IC(0)-style triangular preconditioner whose
+solves go through the transformed SpTRSV operator — the paper's §I
+motivation ("building block to preconditioners for sparse iterative
+solvers") end to end.
+
+    PYTHONPATH=src python examples/pcg_ic0.py
+"""
+import numpy as np
+
+from repro.core import AvgLevelCost, NoRewrite, transform
+from repro.solver import schedule_for_transformed, to_device
+from repro.solver.levelset import solve_scan
+from repro.sparse import generators
+from repro.sparse.csr import CSR, from_coo
+
+
+def spd_from_grid(nx: int, ny: int, seed=0):
+    """SPD matrix A = L L^T from a Poisson-like lower factor."""
+    L = generators.poisson2d_ic0(nx, ny, seed=seed)
+    n = L.n_rows
+    dense = L.to_dense()
+    A = dense @ dense.T
+    return L, A
+
+
+def pcg(A, b, Lfac, ts, iters=80, tol=1e-8):
+    """CG on Ax=b, preconditioner M^-1 = (L L^T)^-1 via two triangular
+    solves; the forward solve uses the transformed level-scheduled engine."""
+    import jax.numpy as jnp
+    import jax
+    import scipy.linalg
+
+    sched = schedule_for_transformed(ts, chunk=128, max_deps=8,
+                                     dtype=np.float64)
+    ds = to_device(sched)
+    fwd = jax.jit(lambda c: solve_scan(ds, c))
+    dense_L = Lfac.to_dense()
+
+    def apply_minv(r):
+        c = ts.preamble(r)
+        y = np.asarray(fwd(jnp.asarray(c, jnp.float32))).astype(np.float64)
+        return scipy.linalg.solve_triangular(dense_L.T, y, lower=False)
+
+    x = np.zeros_like(b)
+    r = b - A @ x
+    z = apply_minv(r)
+    p = z.copy()
+    rz = r @ z
+    for it in range(iters):
+        Ap = A @ p
+        alpha = rz / (p @ Ap)
+        x += alpha * p
+        r -= alpha * Ap
+        rn = np.linalg.norm(r)
+        if rn < tol:
+            return x, it + 1, rn
+        z = apply_minv(r)
+        rz_new = r @ z
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+    return x, iters, np.linalg.norm(r)
+
+
+def main():
+    Lfac, A = spd_from_grid(24, 24)
+    n = A.shape[0]
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal(n)
+    b = A @ x_true
+
+    for name, strat in (("no_rewriting", NoRewrite()),
+                        ("avgLevelCost", AvgLevelCost())):
+        ts = transform(Lfac, strat, validate=False, codegen=False)
+        x, iters, rn = pcg(A, b, Lfac, ts)
+        err = np.abs(x - x_true).max()
+        sched = schedule_for_transformed(ts, chunk=128, max_deps=8)
+        print(f"{name:14s} levels={ts.metrics.num_levels_after:4d} "
+              f"sched_steps={sched.num_steps:4d} cg_iters={iters:3d} "
+              f"resid={rn:.2e} err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: transform a sparse triangular system and solve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import AvgLevelCost, transform
+from repro.solver import (schedule_for_csr, schedule_for_transformed, solve,
+                          solve_csr_seq)
+from repro.sparse import build_levels, generators
+
+
+def main():
+    # 1. a matrix with thin levels (long dependency chains)
+    L = generators.lung2_like(scale=0.1)
+    levels = build_levels(L)
+    print(f"matrix: n={L.n_rows} nnz={L.nnz} levels={levels.num_levels}")
+
+    # 2. the paper's transformation: fatten thin levels by equation rewriting
+    ts = transform(L, AvgLevelCost())
+    m = ts.metrics
+    print(f"transformed: levels {m.num_levels_before} -> "
+          f"{m.num_levels_after} "
+          f"({100 * (1 - m.num_levels_after / m.num_levels_before):.0f}% "
+          f"fewer barriers), total cost {m.total_level_cost_before} -> "
+          f"{m.total_level_cost_after}")
+
+    # 3. solve both ways — identical solutions
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    x_ref = solve_csr_seq(L, b)
+
+    s0 = schedule_for_csr(L, levels, chunk=128, max_deps=8)
+    x0 = solve(s0, b)
+    s1 = schedule_for_transformed(ts, chunk=128, max_deps=8)
+    x1 = solve(s1, ts.preamble(b).astype(np.float32))
+    print(f"schedule steps: {s0.num_steps} -> {s1.num_steps}")
+    print(f"max err untransformed {np.abs(x0 - x_ref).max():.2e}, "
+          f"transformed {np.abs(x1 - x_ref).max():.2e}")
+
+    # 4. the same solve through the Pallas TPU kernel (interpret mode on CPU)
+    from repro.kernels import ops
+    x2 = ops.sptrsv_solve(s1, ts.preamble(b).astype(np.float32))
+    print(f"pallas kernel err {np.abs(x2 - x_ref).max():.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""End-to-end LM training with mid-run failure + restart (fault tolerance).
+
+Trains a ~100M-param reduced InternLM2 for a few hundred steps on CPU,
+simulates a node failure at step 120, restarts from the last committed
+checkpoint, and verifies the loss curve continues.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 240]
+"""
+import argparse
+import tempfile
+from pathlib import Path
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    ckpt = Path(tempfile.mkdtemp(prefix="repro_lm_"))
+    common = ["--arch", "internlm2-1.8b", "--reduced",
+              "--steps", str(args.steps), "--batch", str(args.batch),
+              "--seq", str(args.seq), "--ckpt-dir", str(ckpt),
+              "--ckpt-every", "40", "--log-every", "20"]
+    print("=== phase 1: train until simulated failure at step "
+          f"{args.steps // 2} ===")
+    losses1 = train_main(common + ["--abort-after", str(args.steps // 2)])
+    print("=== phase 2: restart from checkpoint ===")
+    losses2 = train_main(common + ["--resume"])
+    print(f"phase1 first/last: {losses1[0]:.3f}/{losses1[-1]:.3f}; "
+          f"phase2 last: {losses2[-1]:.3f}")
+    assert losses2[-1] < losses1[0], "training did not improve across restart"
+    print("OK: loss improved across the simulated failure + restart")
+
+
+if __name__ == "__main__":
+    main()

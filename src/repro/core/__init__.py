@@ -1,0 +1,20 @@
+"""The paper's primary contribution: SpTRSV dependency-graph transformation.
+
+Pipeline: CSR L -> GraphView (levels + cost model) -> Strategy (avgLevelCost /
+manual / constrained) mutating an EquationStore -> TransformedSystem
+(A', B', d, level schedule) consumed by repro.solver engines.
+"""
+from .graph import CostModel, GraphView
+from .rewrite import EquationStore, RewriteResult
+from .strategies import (AvgLevelCost, ConstrainedAvgLevelCost,
+                         CriticalPathRewrite, ManualEveryK, NoRewrite)
+from .transform import TransformMetrics, TransformedSystem, transform
+from .codegen import generate_c_source, generated_code_bytes
+
+__all__ = [
+    "CostModel", "GraphView", "EquationStore", "RewriteResult",
+    "NoRewrite", "AvgLevelCost", "ManualEveryK", "ConstrainedAvgLevelCost",
+    "CriticalPathRewrite",
+    "TransformMetrics", "TransformedSystem", "transform",
+    "generate_c_source", "generated_code_bytes",
+]

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .sptrsv_level import sptrsv_levels_pallas
+from .spmv_ell import spmv_ell_pallas
+
+__all__ = ["ops", "ref", "sptrsv_levels_pallas", "spmv_ell_pallas"]

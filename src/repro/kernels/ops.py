@@ -1,0 +1,79 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs as jnp ops — bit-exact semantics, no TPU lowering); on TPU set
+REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) to compile with Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..solver.schedule import LevelSchedule
+from .sptrsv_level import sptrsv_levels_pallas
+from .spmv_ell import spmv_ell_pallas
+from . import ref
+
+__all__ = ["default_interpret", "sptrsv_solve", "spmv_ell", "ell_pack_csr"]
+
+
+def default_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def sptrsv_solve(sched: LevelSchedule, c: np.ndarray,
+                 interpret: bool | None = None,
+                 use_ref: bool = False) -> np.ndarray:
+    """Solve a LevelSchedule with the Pallas kernel (or the jnp oracle)."""
+    interpret = default_interpret() if interpret is None else interpret
+    dtype = sched.dep_coef.dtype
+    c_pad = jnp.concatenate([jnp.asarray(c, dtype=dtype),
+                             jnp.zeros((1,), dtype)])
+    args = (jnp.asarray(sched.row_ids), jnp.asarray(sched.dep_idx),
+            jnp.asarray(sched.dep_coef), jnp.asarray(sched.dinv),
+            jnp.asarray(sched.carry_in), jnp.asarray(sched.carry_out),
+            jnp.asarray(sched.c_ids), c_pad)
+    if use_ref:
+        out = ref.sptrsv_levels_ref(*args, n=sched.n, n_carry=sched.n_carry)
+    else:
+        out = sptrsv_levels_pallas(*args, n=sched.n, n_carry=sched.n_carry,
+                                   interpret=interpret)
+    return np.asarray(out)
+
+
+def ell_pack_csr(m, block_rows: int = 512, dtype=np.float32):
+    """Pack a CSR matrix into ELL arrays for spmv_ell.
+
+    Returns (ell_idx (n_pad, D), ell_coef (n_pad, D), n).  Padding indices
+    point at x_pad's final zero slot.
+    """
+    n = m.n_rows
+    deg = m.row_nnz()
+    D = max(int(deg.max()), 1)
+    n_pad = -(-n // block_rows) * block_rows
+    ell_idx = np.full((n_pad, D), m.n_cols, dtype=np.int32)
+    ell_coef = np.zeros((n_pad, D), dtype=dtype)
+    for i in range(n):
+        lo, hi = m.indptr[i], m.indptr[i + 1]
+        k = hi - lo
+        ell_idx[i, :k] = m.indices[lo:hi]
+        ell_coef[i, :k] = m.data[lo:hi]
+    return ell_idx, ell_coef, n
+
+
+def spmv_ell(m, x: np.ndarray, interpret: bool | None = None,
+             use_ref: bool = False, block_rows: int = 512) -> np.ndarray:
+    """y = m @ x via the ELL Pallas kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    ell_idx, ell_coef, n = ell_pack_csr(m, block_rows=block_rows)
+    x_pad = jnp.concatenate([jnp.asarray(x, dtype=ell_coef.dtype),
+                             jnp.zeros((1,), ell_coef.dtype)])
+    if use_ref:
+        y = ref.spmv_ell_ref(jnp.asarray(ell_idx), jnp.asarray(ell_coef), x_pad)
+    else:
+        y = spmv_ell_pallas(jnp.asarray(ell_idx), jnp.asarray(ell_coef),
+                            x_pad, block_rows=block_rows, interpret=interpret)
+    return np.asarray(y[:n])

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (numerics ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sptrsv_levels_ref", "spmv_ell_ref"]
+
+
+def sptrsv_levels_ref(row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out,
+                      c_ids, c_pad, n: int, n_carry: int) -> jax.Array:
+    """Reference for the level-scheduled SpTRSV kernel.
+
+    Shapes: row_ids (S,C) i32; dep_idx (S,C,D) i32; dep_coef (S,C,D) f;
+    dinv (S,C) f; carry_in/out (S,C) i32; c_ids (S,C) i32; c_pad (n+1,) f.
+    Returns x (n,).
+    """
+    x = jnp.zeros((n + 1,), dtype=c_pad.dtype)
+    carry = jnp.zeros((n_carry + 2,), dtype=c_pad.dtype)
+
+    def body(state, s):
+        x, carry = state
+        gathered = x[dep_idx[s]]
+        partial = jnp.sum(dep_coef[s] * gathered, axis=-1)
+        tot = partial + carry[carry_in[s]]
+        xi = (c_pad[c_ids[s]] - tot) * dinv[s]
+        x = x.at[row_ids[s]].set(xi)
+        carry = carry.at[carry_out[s]].set(tot)
+        return (x, carry), None
+
+    (x, _), _ = jax.lax.scan(body, (x, carry), jnp.arange(row_ids.shape[0]))
+    return x[:n]
+
+
+def spmv_ell_ref(ell_idx, ell_coef, x_pad) -> jax.Array:
+    """y = A @ x for ELL-packed A.
+
+    ell_idx (n_pad, D) i32 (padding -> len(x_pad)-1), ell_coef (n_pad, D) f,
+    x_pad (n+1,) f.  Returns y (n_pad,).
+    """
+    return jnp.sum(ell_coef * x_pad[ell_idx], axis=-1)

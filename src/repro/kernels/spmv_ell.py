@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: ELL SpMV (y = A @ x) — the dependency-free building
+block used by the transformed solve's B'-preamble and by the PCG example.
+
+Grid over row blocks; x stays VMEM-resident across the whole sweep (rows are
+independent — unlike the SpTRSV kernel there is no sequential carry); each
+block streams a (C, D) ELL tile.  BlockSpec tiling: C rows (sublane-aligned),
+D dep slots (lane dimension).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["spmv_ell_pallas"]
+
+
+def _kernel(ell_idx_ref, ell_coef_ref, x_ref, y_ref):
+    idx = ell_idx_ref[...]                   # (C, D)
+    coef = ell_coef_ref[...]
+    gathered = jnp.take(x_ref[...], idx, axis=0)
+    y_ref[...] = jnp.sum(coef * gathered, axis=-1)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell_pallas(ell_idx, ell_coef, x_pad, *, block_rows: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """y (n_pad,) = ELL(A) @ x.
+
+    ell_idx/ell_coef: (n_pad, D) with n_pad % block_rows == 0; padding slots
+    index the final (zero) entry of x_pad with coef 0.
+    """
+    n_pad, D = ell_idx.shape
+    assert n_pad % block_rows == 0, (n_pad, block_rows)
+    dtype = ell_coef.dtype
+    nx = _round_up(x_pad.shape[0], 128)
+    x_full = jnp.zeros((nx,), dtype).at[: x_pad.shape[0]].set(
+        x_pad.astype(dtype))
+    grid = (n_pad // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((nx,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), dtype),
+        interpret=interpret,
+    )(ell_idx, ell_coef.astype(dtype), x_full)

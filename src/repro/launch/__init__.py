@@ -1,0 +1,5 @@
+# NOTE: dryrun is intentionally NOT imported here — it sets XLA_FLAGS at
+# import time and must only be run as a __main__ module.
+from . import mesh, specs
+
+__all__ = ["mesh", "specs"]

@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+# placeholder host devices; record memory/cost analysis + collective stats.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+#         --shape train_4k [--multi-pod]
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/
+#
+# The XLA_FLAGS line above MUST stay the first statement: jax locks the
+# device count at first init.  (Smoke tests and benchmarks never import this
+# module.)
+
+import argparse
+import functools
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import all_arch_ids, get_config
+from ..models.api import get_model
+from ..train.optimizer import AdamWConfig
+from ..train import train_step as ts_mod
+from ..train.sharding import param_shardings, batch_specs
+from .mesh import make_production_mesh
+from .specs import SHAPES, cell_is_applicable, input_specs, skip_reason
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# v5e hardware model (roofline constants)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+def _bytes_of_shape(dtype: str, dims: str) -> int:
+    sizes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+             "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+    b = sizes.get(dtype, 4)
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return b * n
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output-shape bytes + count per collective op kind.
+
+    Convention: bytes = op RESULT size (all-gather: full gathered tensor;
+    all-reduce: tensor size; reduce-scatter: shard size).  Counts are per
+    compiled program (scan bodies count once per op, multiplied at runtime
+    by trip count — recorded separately as 'static').
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(.*)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in COLLECTIVES:
+            # match the op name (e.g. "all-gather(", "all-gather-start(")
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                shapes = _SHAPE_RE.findall(rhs.split(kind)[0])
+                nbytes = sum(_bytes_of_shape(d, dims) for d, dims in shapes)
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += nbytes
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    stats["total_count"] = sum(v["count"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _batch_shardings(batch_shape, mesh):
+    bspec = batch_specs(mesh)
+    sz = int(np.prod([mesh.shape[a] for a in bspec]))
+
+    def one(leaf):
+        first = bspec if leaf.shape and leaf.shape[0] % sz == 0 else None
+        entries = [first] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*entries))
+    return jax.tree.map(one, batch_shape)
+
+
+def _cache_shardings(cache_shape, mesh, seq_axis="model"):
+    """KV caches: batch over data(+pod), long seq dims over 'model'."""
+    bspec = batch_specs(mesh)
+    dsz = int(np.prod([mesh.shape[a] for a in bspec]))
+    msz = mesh.shape[seq_axis]
+
+    def one(leaf):
+        shp = leaf.shape
+        entries = [None] * len(shp)
+        if len(shp) == 5:          # (L, B, S, K, hd)
+            if shp[1] % dsz == 0:
+                entries[1] = bspec
+            if shp[2] % msz == 0:
+                entries[2] = seq_axis
+        elif len(shp) == 4:        # (B, win, K, hd) or (L?, B, ...) hybrid
+            if shp[0] % dsz == 0:
+                entries[0] = bspec
+            if shp[1] % msz == 0 and shp[1] >= 1024:
+                entries[1] = seq_axis
+        elif len(shp) >= 2:        # conv/ssd/lru states: batch-ish leading
+            lead = 1 if len(shp) >= 3 and shp[0] <= 64 else 0
+            if shp[lead] % dsz == 0:
+                entries[lead] = bspec
+        return NamedSharding(mesh, P(*entries))
+    return jax.tree.map(one, cache_shape)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             mesh=None, variant: dict | None = None) -> dict:
+    """Lower+compile one cell; returns the roofline record."""
+    cfg = get_config(arch)
+    variant = variant or {}
+    for k, v in variant.items():
+        cfg = cfg.__class__(**{**cfg.__dict__, k: v}) if hasattr(cfg, k) \
+            else cfg
+    if not cell_is_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape, "skip": skip_reason(cfg, shape)}
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    from ..train.meshctx import set_mesh_context
+    set_mesh_context(mesh, batch_specs(mesh))
+    model = get_model(cfg)
+    spec = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(functools.partial(model.init_params,
+                                                    cfg=cfg), key)
+    p_shard = param_shardings(params_shape, mesh)
+    t0 = time.time()
+
+    if spec["kind"] == "train":
+        state_shape = {"params": params_shape,
+                       "opt": jax.eval_shape(
+                           lambda p: __import__(
+                               "repro.train.optimizer",
+                               fromlist=["init_opt_state"]).init_opt_state(p),
+                           params_shape)}
+        s_shard = ts_mod.state_shardings(state_shape, mesh)
+        b_shard = _batch_shardings(spec["batch"], mesh)
+        step = ts_mod.make_train_step(cfg, AdamWConfig())
+        fn = jax.jit(step, in_shardings=(s_shard, b_shard),
+                     out_shardings=(s_shard, None))
+        lowered = fn.lower(_sds(state_shape), _sds(spec["batch"]))
+    elif spec["kind"] == "prefill":
+        extra_names = [k for k in ("src_embeds", "prefix_embeds")
+                       if k in spec]
+        extra_vals = [spec[k] for k in extra_names]
+        extra_shards = [_batch_shardings({"x": v}, mesh)["x"]
+                        for v in extra_vals]
+        cache_len = spec["cache_len"]
+
+        def prefill_fn(params, tokens, *extras):
+            kwargs = dict(zip(extra_names, extras))
+            return model.prefill(params, tokens, cfg, cache_len=cache_len,
+                                 **kwargs)
+        tok_shard = _batch_shardings({"t": spec["tokens"]}, mesh)["t"]
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(p_shard, tok_shard, *extra_shards),
+                     out_shardings=None)
+        lowered = fn.lower(params_shape, spec["tokens"], *extra_vals)
+    else:  # decode
+        cache_shape = spec["cache"]
+        c_shard = _cache_shardings(cache_shape, mesh)
+        tok_shard = _batch_shardings({"t": spec["token"]}, mesh)["t"]
+
+        def decode_fn(params, token, cache, pos):
+            return model.decode_step(params, token, cache, pos, cfg)
+        fn = jax.jit(decode_fn,
+                     in_shardings=(p_shard, tok_shard, c_shard, None),
+                     out_shardings=(None, c_shard))
+        lowered = fn.lower(params_shape, spec["token"], cache_shape,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    from .hlo_analysis import analyze_hlo
+    corrected = analyze_hlo(hlo)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "kind": spec["kind"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # raw cost_analysis numbers (scan bodies counted ONCE — see
+        # hlo_analysis.py); kept for transparency
+        "hlo_flops_raw": flops, "hlo_bytes_raw": bytes_acc,
+        # loop-corrected per-chip totals
+        "hlo_flops": corrected["flops"], "hlo_bytes": corrected["bytes"],
+        "hlo_bytes_min": corrected["bytes_min"],
+        "collectives_raw": coll,
+        "collectives": {
+            "total_bytes": corrected["collective_bytes"],
+            "counts": corrected["collective_counts"],
+            "total_count": int(sum(corrected["collective_counts"]
+                                   .values())),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+    }
+    rec["roofline"] = roofline_terms(rec, cfg, SHAPES[shape])
+    return rec
+
+
+def roofline_terms(rec: dict, cfg, sd) -> dict:
+    """Per-chip roofline terms from the loop-corrected HLO totals (the
+    compiled module is the per-device SPMD program)."""
+    flops, bts = rec["hlo_flops"], rec["hlo_bytes"]
+    cbytes = rec["collectives"]["total_bytes"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bts / HBM_BW
+    memory_min_s = rec.get("hlo_bytes_min", bts) / HBM_BW
+    collective_s = cbytes / LINK_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    # MODEL_FLOPS: 6*N*D for train (fwd+bwd), 2*N*D for single fwd
+    N = cfg.active_params_count()
+    D = sd.global_batch * (sd.seq_len if rec["kind"] != "decode" else 1)
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * N * D / rec["chips"]    # per chip
+    step_s = max(compute_s, memory_s, collective_s)
+    step_min_s = max(compute_s, memory_min_s, collective_s)
+    dominant_min = max(("compute", compute_s), ("memory", memory_min_s),
+                       ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_min_s": memory_min_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "dominant_min": dominant_min,
+        "model_flops_per_chip": model_flops,
+        "useful_fraction": model_flops / flops if flops else 0.0,
+        # fraction of peak compute achieved if the dominant term bounds the
+        # step (the roofline score): MODEL_FLOPS / (step_time * peak).
+        # _min variant assumes perfect elementwise fusion (TPU-realistic).
+        "roofline_mfu": (model_flops / (step_s * PEAK_FLOPS)
+                         if step_s > 0 else 0.0),
+        "roofline_mfu_min": (model_flops / (step_min_s * PEAK_FLOPS)
+                             if step_min_s > 0 else 0.0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments")
+    args = ap.parse_args()
+
+    cells = []
+    archs = all_arch_ids() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    results = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}|{shape}|{'2pod' if mp else '1pod'}"
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp, mesh=mesh)
+                    rec["mesh_tag"] = "2pod" if mp else "1pod"
+                    if "skip" in rec:
+                        print(f"SKIP {tag}: {rec['skip']}", flush=True)
+                    else:
+                        r = rec["roofline"]
+                        print(f"OK   {tag}: compile {rec['compile_s']}s "
+                              f"flops {rec['hlo_flops']:.3e} "
+                              f"dom={r['dominant']} "
+                              f"useful={r['useful_fraction']:.2f}",
+                              flush=True)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh_tag": "2pod" if mp else "1pod",
+                           "error": f"{type(e).__name__}: {e}"}
+                    print(f"FAIL {tag}: {rec['error']}", flush=True)
+                results.append(rec)
+                (outdir / "dryrun_results.json").write_text(
+                    json.dumps(results, indent=1, default=str))
+    print(f"wrote {outdir/'dryrun_results.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,271 @@
+"""Corrected HLO program analysis.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE, so any
+scanned program (layer stacks, flash-attention chunk loops, microbatching)
+is undercounted by the trip counts.  This module re-derives program totals
+from `compiled.as_text()`:
+
+  * per-computation symbol tables resolve operand shapes (the optimized HLO
+    dialect prints shapes only at definition sites);
+  * `while` ops multiply their body totals by the trip count taken from the
+    op's `backend_config known_trip_count` (canonical lax.scan lowering),
+    falling back to the condition's compare constant;
+  * `fusion`/`call` ops pull dot-FLOPs from their callee computation and
+    charge memory traffic at the fusion boundary (operands + result);
+  * collectives are summed with loop multipliers (result-shape bytes:
+    all-gather => gathered size, all-reduce => tensor size, reduce-scatter
+    => shard size).
+
+flops counts dot ops only (elementwise flops are bandwidth-dominated and a
+few % of any cell here); bytes approximates HBM traffic as the sum of
+top-level operand+result sizes at fusion granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze_hlo", "HloTotals"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_REF = re.compile(r"%([\w\.\-]+)")
+_OPCODE = re.compile(r"\)?\s*([\w\-]+)\(")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return b * n
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class _Op:
+    var: str
+    result_shapes: list          # [(dtype, dims), ...]
+    opcode: str
+    operands: list               # var names
+    line: str
+
+
+class _Comp:
+    def __init__(self, name: str, header: str):
+        self.name = name
+        self.ops: list[_Op] = []
+        self.symbols: dict[str, list] = {}
+        # header params: "p0: f32[1,2], p1: (s32[], f32[3])"
+        for pm in re.finditer(r"([\w\.\-]+)\s*:\s*([^,()]*(?:\([^)]*\))?"
+                              r"[^,]*)", header):
+            shapes = _SHAPE.findall(pm.group(2))
+            if shapes:
+                self.symbols[pm.group(1)] = shapes
+
+    def add_op(self, line: str):
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*(.*)$", s)
+        if not m:
+            return
+        var, rhs = m.group(1), m.group(2)
+        om = _OPCODE.search(rhs)
+        if not om:
+            return
+        # everything before the opcode is the result type signature
+        type_part = rhs[:om.start() + (1 if rhs[om.start()] == ")" else 0)]
+        opcode = om.group(1)
+        result_shapes = _SHAPE.findall(type_part)
+        args_part = rhs[om.end():]
+        # operand references up to the closing paren of the op call
+        depth = 1
+        end = len(args_part)
+        for i, ch in enumerate(args_part):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _REF.findall(args_part[:end])
+        self.symbols[var] = result_shapes
+        self.ops.append(_Op(var, result_shapes, opcode, operands, rhs))
+
+    def shape_of(self, var: str):
+        return self.symbols.get(var, [])
+
+
+def _split(text: str) -> tuple[dict[str, "_Comp"], str | None]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{"):
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = _Comp(m.group(1), m.group(2))
+                    comps[cur.name] = cur
+                    if line.startswith("ENTRY"):
+                        entry = cur.name
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                cur.add_op(line)
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloTotals:
+    flops: float = 0.0
+    bytes: float = 0.0        # all top-level ops (upper bound, CPU-fusion
+    #                           granularity; TPU fuses more)
+    bytes_min: float = 0.0    # dots/copies/slice-updates/collectives only
+    #                           (lower bound: elementwise assumed fused away)
+    coll_bytes: float = 0.0
+    coll_counts: dict | None = None
+
+    def add(self, other, mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_min += other.bytes_min * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in (other.coll_counts or {}).items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+
+
+def _dot_flops(comp: _Comp, op: _Op) -> float:
+    if not op.result_shapes or not op.operands:
+        return 0.0
+    lhs_shapes = comp.shape_of(op.operands[0])
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1].split(",") if lhs_shapes[0][1].strip() else []
+    contract = 1
+    m = _LHS_C.search(op.line)
+    if m and m.group(1).strip():
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contract *= int(lhs_dims[idx])
+    out = _nelems(op.result_shapes[0][1])
+    return 2.0 * out * contract
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = _split(text)
+    if entry is None:
+        entry = next((c for c in comps if c.startswith("main")),
+                     next(iter(comps), None))
+    dot_memo: dict[str, float] = {}
+
+    def dot_total(name: str) -> float:
+        if name in dot_memo:
+            return dot_memo[name]
+        dot_memo[name] = 0.0
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0
+        tot = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                tot += _dot_flops(comp, op)
+            elif op.opcode in ("fusion", "call", "conditional"):
+                cm = _CALLS.search(op.line) or re.search(
+                    r"to_apply=%?([\w\.\-]+)", op.line)
+                if cm:
+                    tot += dot_total(cm.group(1))
+        dot_memo[name] = tot
+        return tot
+
+    memo: dict[str, HloTotals] = {}
+
+    def walk(name: str) -> HloTotals:
+        if name in memo:
+            return memo[name]
+        t = HloTotals(coll_counts={})
+        memo[name] = t
+        comp = comps.get(name)
+        if comp is None:
+            return t
+        for op in comp.ops:
+            if op.opcode == "while":
+                tm = _TRIP.search(op.line)
+                trips = int(tm.group(1)) if tm else 1
+                bm = _BODY.search(op.line)
+                if bm:
+                    t.add(walk(bm.group(1)), mult=trips)
+                continue
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast", "after-all"):
+                continue
+            nbytes_out = sum(_nbytes(d, dims) for d, dims in
+                             op.result_shapes)
+            nbytes_in = 0
+            for o in op.operands:
+                nbytes_in += sum(_nbytes(d, dims)
+                                 for d, dims in comp.shape_of(o))
+            if op.opcode == "dynamic-update-slice":
+                # in-place update: traffic = update slice (read+write), not
+                # the whole buffer (operand 0 aliases the result)
+                upd = (sum(_nbytes(d, dims)
+                           for d, dims in comp.shape_of(op.operands[1]))
+                       if len(op.operands) > 1 else 0)
+                t.bytes += 2 * upd
+                t.bytes_min += 2 * upd
+            elif op.opcode == "dynamic-slice":
+                t.bytes += 2 * nbytes_out   # read + write of the slice
+                t.bytes_min += 2 * nbytes_out
+            else:
+                t.bytes += nbytes_out + nbytes_in
+                if op.opcode in ("dot", "copy", "convolution",
+                                 "concatenate") or \
+                        op.opcode.replace("-start", "") in COLLECTIVES:
+                    t.bytes_min += nbytes_out + nbytes_in
+            if op.opcode == "dot":
+                t.flops += _dot_flops(comp, op)
+            elif op.opcode in ("fusion", "call"):
+                cm = _CALLS.search(op.line) or re.search(
+                    r"to_apply=%?([\w\.\-]+)", op.line)
+                if cm:
+                    t.flops += dot_total(cm.group(1))
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                t.coll_bytes += nbytes_out
+                t.coll_counts[base] = t.coll_counts.get(base, 0) + 1
+        return t
+
+    tot = walk(entry) if entry else HloTotals(coll_counts={})
+    return {
+        "flops": tot.flops,
+        "bytes": tot.bytes,
+        "bytes_min": tot.bytes_min,
+        "collective_bytes": tot.coll_bytes,
+        "collective_counts": {k: int(v)
+                              for k, v in (tot.coll_counts or {}).items()},
+    }

@@ -1,0 +1,75 @@
+"""Serving driver: batched prefill + greedy decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+
+Exercises the same prefill/decode entry points the dry-run lowers at
+production shapes (prefill_32k / decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_reduced
+from ..models.api import get_model
+
+
+def generate(cfg, params, tokens, gen_steps: int, cache_len: int,
+             extra: dict | None = None):
+    model = get_model(cfg)
+    extra = extra or {}
+    prefill = jax.jit(lambda p, t, **kw: model.prefill(
+        p, t, cfg, cache_len=cache_len, **kw))
+    decode = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos,
+                                                            cfg))
+    logits, cache = prefill(params, tokens, **extra)
+    out = [jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)]
+    pos = tokens.shape[1] + (cfg.frontend_positions
+                             if cfg.frontend != "none" else 0)
+    for i in range(gen_steps - 1):
+        logits, cache = decode(params, out[-1], cache, jnp.int32(pos + i))
+        out.append(jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32))
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = get_model(cfg)
+    rng = np.random.default_rng(args.seed)
+    params = model.init_params(jax.random.PRNGKey(args.seed), cfg)
+    B, S = args.batch, args.prompt_len
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["src_embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    elif cfg.frontend != "none":
+        extra["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_positions, cfg.d_model)),
+            jnp.float32)
+    cache_len = S + args.gen + 8
+    t0 = time.time()
+    out = generate(cfg, params, tokens, args.gen, cache_len, extra)
+    dt = time.time() - t0
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({B * args.gen / dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(out[0][:12]))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from . import api, attention, common, config, encdec, mamba2, mlp, rglru, \
+    transformer
+from .api import get_model
+from .config import ArchConfig, MoEConfig, RecurrentConfig, SSMConfig
+
+__all__ = ["api", "attention", "common", "config", "encdec", "mamba2", "mlp",
+           "rglru", "transformer", "get_model", "ArchConfig", "MoEConfig",
+           "RecurrentConfig", "SSMConfig"]

@@ -1,0 +1,27 @@
+"""Unified model API: family dispatch for init/loss/serve entry points."""
+from __future__ import annotations
+
+import types
+
+from . import encdec, mamba2, rglru, transformer
+from .config import ArchConfig
+
+__all__ = ["get_model"]
+
+
+def get_model(cfg: ArchConfig) -> types.ModuleType:
+    """Return the module implementing cfg's family.
+
+    Every module exposes: init_params(key, cfg); loss_fn(params, batch, cfg);
+    prefill(params, tokens, cfg, cache_len, ...); decode_step(params, token,
+    cache, pos, cfg).  (encdec's loss takes batch with src_embeds.)
+    """
+    if cfg.family in ("dense", "moe"):
+        return transformer
+    if cfg.family == "ssm":
+        return mamba2
+    if cfg.family == "hybrid":
+        return rglru
+    if cfg.family == "encdec":
+        return encdec
+    raise KeyError(cfg.family)

@@ -1,0 +1,213 @@
+"""GQA attention: chunked (flash-style) training/prefill path + cached decode.
+
+The chunked path scans over KV blocks with an online-softmax accumulator so
+activation memory is O(S * kv_chunk) instead of O(S^2) — required to lower
+prefill_32k (32768 tokens x batch 32) at all, and the right structure for TPU
+(each (q_chunk, kv_chunk) tile is an MXU-shaped matmul).
+
+Supports:
+  * grouped-query attention (n_kv < n_heads), MQA (n_kv = 1);
+  * optional QKV bias (qwen2), head_dim != d_model/n_heads (gemma);
+  * causal masking, local (sliding-window) masking (recurrentgemma);
+  * cross-attention (no causal mask, separate KV source, enc-dec);
+  * decode step against a (possibly ring-buffered local) KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense, init_dense, rope
+
+__all__ = ["init_attention", "attention", "decode_attention", "AttnParams"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": init_dense(kq, d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "k": init_dense(kk, d, cfg.n_kv * hd, dtype, bias=cfg.qkv_bias),
+        "v": init_dense(kv, d, cfg.n_kv * hd, dtype, bias=cfg.qkv_bias),
+        "o": init_dense(ko, cfg.n_heads * hd, d, dtype, bias=False),
+    }
+
+
+AttnParams = dict
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _chunked_attn(q, k, v, *, causal: bool, window: int, q_offset: int,
+                  kv_chunk: int = 512, q_chunk: int = 512):
+    """Flash-style online-softmax attention, chunked over BOTH q and kv.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, K, hd) with H % K == 0.  K/V are expanded
+    to the full H heads (head h <- kv head h // G) so the head dimension
+    shards over the 'model' mesh axis in one piece — GQA's split (K, G) dims
+    rarely divide a 16-way axis and GSPMD otherwise re-gathers the flash
+    accumulators on EVERY kv step (measured: 62k all-gathers/step before
+    this change; see EXPERIMENTS.md §Perf).  Peak activation memory is
+    O(q_chunk * kv_chunk) per (batch, head).  Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(hd)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)     # (B, Sk, H, hd); order k*G+g
+        v = jnp.repeat(v, G, axis=2)
+    # pad heads to a multiple of the model axis so the head dim shards in
+    # one piece (odd head counts — 40/28/14 — otherwise force replicated
+    # flash carries and a re-gather on every kv step)
+    from ..train.meshctx import constrain_batch, model_axis_size
+    msz = model_axis_size()
+    H_orig = H
+    if H % msz:
+        hp = (-(-H // msz)) * msz - H
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, hp), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, hp), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, hp), (0, 0)))
+        H += hp
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    qp, kp = nq * q_chunk - Sq, nk * kv_chunk - Sk
+    if qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0), (0, 0)))
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0), (0, 0)))
+    qc = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, kv_chunk, H, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, kv_chunk, H, hd), 1, 0)
+
+    cb = lambda x: constrain_batch(x, 0, model_dim=2)  # (B, qc, H, ...)
+
+    @jax.checkpoint  # recompute per q-block in bwd: only one block's kv-scan
+    def q_block_inner(qi, i):  # residuals are live at a time
+        qi = qi.astype(jnp.float32) * scale
+        q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint  # s/p rematerialized per kv step in bwd
+        def kv_block_inner(m, l, acc, kj, vj, j):
+            kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhe,bche->bqhc", qi, kj.astype(jnp.float32))
+            valid = (kv_pos < Sk)[None, None, None, :]
+            if causal:
+                cm = kv_pos[None, :] <= q_pos[:, None]       # (qc, c)
+                if window:
+                    cm &= kv_pos[None, :] > q_pos[:, None] - window
+                valid = valid & cm[None, :, None, :]
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhc,bche->bqhe", p, vj.astype(jnp.float32))
+            return m_new, l, acc
+
+        def kv_block(carry, ys):
+            m, l, acc = carry
+            kj, vj, j = ys
+            m, l, acc = kv_block_inner(m, l, acc, kj, vj, j)
+            return (cb(m), cb(l), cb(acc)), None
+
+        m0 = cb(jnp.full((B, q_chunk, H), NEG_INF, dtype=jnp.float32))
+        l0 = cb(jnp.zeros((B, q_chunk, H), dtype=jnp.float32))
+        acc0 = cb(jnp.zeros((B, q_chunk, H, hd), dtype=jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, acc0), (kc, vc, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)           # (B, qc, H, hd)
+
+    def q_block(_, xs):
+        qi, i = xs
+        return None, cb(q_block_inner(qi, i))
+
+    _, blocks = jax.lax.scan(q_block, None, (qc, jnp.arange(nq)))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Sq, :H_orig]
+
+
+def attention(p, x, positions, cfg, *, kv_source=None, causal=True,
+              kv_chunk: int = 512, q_offset: int = 0, with_cache=False):
+    """Full attention over x (training / prefill).
+
+    kv_source: encoder output for cross-attention (then causal=False).
+    Returns y or (y, (k, v)) when with_cache.
+    """
+    hd = cfg.resolved_head_dim
+    src = x if kv_source is None else kv_source
+    q = _split_heads(dense(p["q"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(p["k"], src), cfg.n_kv, hd)
+    v = _split_heads(dense(p["v"], src), cfg.n_kv, hd)
+    if kv_source is None:  # self-attention gets RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    window = cfg.window if cfg.attention == "local" else 0
+    y = _chunked_attn(q, k, v, causal=causal, window=window,
+                      q_offset=q_offset, kv_chunk=kv_chunk)
+    y = dense(p["o"], y.reshape(y.shape[:2] + (cfg.n_heads * hd,)))
+    if with_cache:
+        return y, (k, v)
+    return y
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, cfg, *, cross=False):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_cache, K, hd); pos: scalar int (absolute
+    position of the new token).  For self-attention the new token's K/V are
+    written at index `pos % S_cache` (ring buffer semantics cover both full
+    and local-window caches).  Returns (y, cache_k, cache_v).
+    """
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense(p["q"], x), cfg.n_heads, hd)
+    if not cross:
+        k_new = _split_heads(dense(p["k"], x), cfg.n_kv, hd)
+        v_new = _split_heads(dense(p["v"], x), cfg.n_kv, hd)
+        positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        S_cache = cache_k.shape[1]
+        slot = jnp.mod(pos, S_cache)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, 1)
+    B, S_cache, K, _ = cache_k.shape
+    G = cfg.n_heads // K
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, 1, K, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgh,bckh->bqgkc", qg, cache_k.astype(jnp.float32))
+    cache_pos = jnp.arange(S_cache)
+    if cross:
+        valid = jnp.ones((S_cache,), dtype=bool)
+    else:
+        valid = _ring_valid(cache_pos, pos, S_cache,
+                            cfg.window if cfg.attention == "local" else 0)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bqgkc,bckh->bqgkh", w, cache_v.astype(jnp.float32))
+    y = jnp.moveaxis(y, 3, 2).reshape(B, 1, cfg.n_heads * hd)  # (K,G) order
+    y = y.astype(x.dtype)
+    return dense(p["o"], y), cache_k, cache_v
+
+
+def _ring_valid(slots, pos, S_cache, window):
+    """Which ring slots hold valid (written, in-window) positions."""
+    stored = pos - jnp.mod(pos - slots, S_cache)   # absolute positions
+    ok = stored >= 0
+    if window:
+        ok &= stored > pos - window
+    return ok

@@ -1,0 +1,195 @@
+"""Shared model building blocks (pure-function style: params are dict
+pytrees, every layer is `f(params, x, ...)`).
+
+Conventions:
+  * params are created by `init_*` functions taking a jax.random key;
+  * all matmuls accumulate in float32 (`preferred_element_type`) and cast
+    back to the activation dtype — standard bf16 training practice;
+  * weights carry a `.sharding_hint` path convention instead: the sharding
+    rules in repro.train.sharding key off parameter path names.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["dense", "init_dense", "rmsnorm", "init_rmsnorm", "rope",
+           "embed", "init_embed", "gelu", "silu", "softmax_xent",
+           "DTYPES"]
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"],
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_embed(key, vocab: int, d: int, dtype):
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"w": w.astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["w"], ids, axis=0)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs
+    # ang: (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def silu(x):
+    return (x.astype(jnp.float32) *
+            jax.nn.sigmoid(x.astype(jnp.float32))).astype(x.dtype)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean token cross-entropy; logits (..., V) fp32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def scan_blocks_grouped(block_fn, carry, stacked_params, *, remat: bool,
+                        group: int, n_layers: int):
+    """Scan a layer stack with two-level (sqrt-L) remat.
+
+    block_fn(bp, carry) -> carry.  With remat, layers are scanned in groups
+    of `group`; only group inputs are saved persistently — each group's
+    backward re-runs its layers (whose inputs then live transiently), and
+    each layer is itself checkpointed so block internals are rematerialized.
+    This keeps the persistent residual stack at L/group slices instead of L
+    (critical at global-batch scale; see EXPERIMENTS.md §Perf).
+    """
+    import functools as _ft
+    NP = jax.checkpoint_policies.nothing_saveable
+
+    if not remat:
+        def body(c, bp):
+            return block_fn(bp, c), None
+        carry, _ = jax.lax.scan(body, carry, stacked_params)
+        return carry
+
+    g = group if group and n_layers % group == 0 else 1
+    if g == 1:
+        def body(c, bp):
+            fn = jax.checkpoint(block_fn, policy=NP)
+            return fn(bp, c), None
+        carry, _ = jax.lax.scan(body, carry, stacked_params)
+        return carry
+
+    G = n_layers // g
+    grouped = jax.tree.map(lambda a: a.reshape((G, g) + a.shape[1:]),
+                           stacked_params)
+
+    @_ft.partial(jax.checkpoint, policy=NP)
+    def group_fn(gbp, c):
+        def inner(c2, bp):
+            fn = jax.checkpoint(block_fn, policy=NP)
+            return fn(bp, c2), None
+        c, _ = jax.lax.scan(inner, c, gbp)
+        return c
+
+    def gbody(c, gbp):
+        return group_fn(gbp, c), None
+
+    carry, _ = jax.lax.scan(gbody, carry, grouped)
+    return carry
+
+
+def lm_loss_chunked(x, w, labels, mask=None, tied: bool = False,
+                    chunk: int = 512):
+    """Cross-entropy over (B, S, d) hidden states WITHOUT materializing the
+    full (B, S, V) logits: scan over sequence chunks, rematerializing each
+    chunk's logits in the backward pass.
+
+    w: unembed weight (d, V), or embedding table (V, d) when tied=True.
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        m = jnp.zeros((B, S), jnp.float32) if mask is None \
+            else mask.astype(jnp.float32)
+        mask = jnp.pad(jnp.ones((B, S), jnp.float32) if mask is None else m,
+                       ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    else:
+        mask = mask.astype(jnp.float32)
+    from ..train.meshctx import constrain_batch
+    xc = constrain_batch(jnp.moveaxis(x.reshape(B, nc, chunk, d), 1, 0), 1)
+    lc = constrain_batch(jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0), 1)
+    mc = constrain_batch(jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0), 1)
+
+    @jax.checkpoint
+    def one(xi, li, mi):
+        from ..train.meshctx import constrain_batch
+        if tied:
+            logits = jnp.einsum("bsd,vd->bsv", xi, w,
+                                preferred_element_type=jnp.float32)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", xi, w,
+                                preferred_element_type=jnp.float32)
+        logits = constrain_batch(logits, 0, model_dim=2)  # (B, chunk, V)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mi
+        return jnp.sum(nll), jnp.sum(mi)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        s, c = one(*xs)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,287 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q;
+within-chunk outputs use the quadratic (attention-like) form with a decay
+mask, cross-chunk contributions flow through the recurrent chunk states
+(one lax.scan over chunks).  Decode is the O(1) recurrent update.
+
+Shapes: d_inner = expand*d_model, H = d_inner/P heads, state N per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import DTYPES, dense, init_dense, init_embed, init_rmsnorm, \
+    embed, rmsnorm, silu, softmax_xent
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_state", "ssd_params_per_layer"]
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.state_dim
+
+
+def ssd_params_per_layer(cfg) -> int:
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return (d * (2 * d_inner + 2 * N + H)      # in_proj (z, x, B, C, dt)
+            + conv_dim * cfg.ssm.conv_width    # depthwise conv
+            + 2 * H                            # A_log, D
+            + H                                # dt bias
+            + d_inner * d)                     # out_proj
+
+
+def _init_block(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln": init_rmsnorm(d, dtype),
+        "in_proj": init_dense(k1, d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)=-1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": init_dense(k3, d_inner, d, dtype),
+        "ln_out": init_rmsnorm(d_inner, dtype),
+    }
+
+
+def init_params(key, cfg):
+    dtype = DTYPES[cfg.param_dtype]
+    ke, kb, ko = jax.random.split(key, 3)
+    keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(keys)
+    p = {"embed": init_embed(ke, cfg.padded_vocab, cfg.d_model, dtype),
+         "blocks": blocks, "ln_f": init_rmsnorm(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_dense(ko, cfg.d_model, cfg.padded_vocab, dtype)
+    return p
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x (B,S,C), w (W,C).  If state (B,W-1,C) is
+    given, runs in streaming mode and returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    y = y + b
+    if state is None:
+        return y
+    return y, xp[:, -(W - 1):]
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk, h0=None):
+    """Chunked SSD.
+
+    xh (B,S,H,P); dt (B,S,H) (softplus'ed); A (H,) negative; Bm/Cm (B,S,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    xc = xh.reshape(Bsz, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(f32)
+
+    dA = dtc * A[None, None, None, :]                 # (B,nc,Q,H) negative
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    # decay from position j to end of chunk / from start to position i
+    seg_end = cum[:, :, -1:, :]                       # total chunk decay
+    # intra-chunk mask: L[i,j] = exp(cum_i - cum_j) for j <= i
+    Li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(Li), 0.0)
+    xdt = xc * dtc[..., None]                         # (B,nc,Q,H,P)
+    # diagonal (within-chunk) term
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)         # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", G, L, xdt)
+    # chunk states: contribution of chunk c to the carried state
+    decay_out = jnp.exp(seg_end - cum)                # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_out, xdt)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(seg_end[:, :, 0, :])        # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_out = h
+        h = h * dec[..., None, None] + st
+        return h, h_out
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+    hT, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)               # (B,nc,H,P,N)
+    decay_in = jnp.exp(cum)                           # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, decay_in, h_prev)
+    y = (y_diag + y_off).reshape(Bsz, nc * Q, H, P)
+    return y[:, :S].astype(xh.dtype), hT
+
+
+def _block_apply(bp, x, cfg, conv_state=None, ssd_state=None):
+    """One Mamba-2 block.  Streaming when states are provided."""
+    from ..train.meshctx import constrain_batch
+    d_inner, H, P, N = _dims(cfg)
+    s = cfg.ssm
+    x = constrain_batch(x)
+    residual = x
+    x = rmsnorm(bp["ln"], x, cfg.norm_eps)
+    zxbcdt = dense(bp["in_proj"], x)
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    if conv_state is None:
+        xbc = _causal_conv(xbc, bp["conv_w"], bp["conv_b"])
+        new_conv = None
+    else:
+        xbc, new_conv = _causal_conv(xbc, bp["conv_w"], bp["conv_b"],
+                                     state=conv_state)
+    xbc = silu(xbc)
+    xr, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    Bsz, S = xr.shape[:2]
+    xh = xr.reshape(Bsz, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + bp["dt_bias"][None, None, :])
+    A = -jnp.exp(bp["A_log"])
+    if ssd_state is None and S > 1:
+        y, hT = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+    else:
+        h0 = ssd_state if ssd_state is not None else \
+            jnp.zeros((Bsz, H, P, N), jnp.float32)
+        # single-step recurrence (decode)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                  # (B,H)
+        xdt = (xh[:, 0].astype(jnp.float32)
+               * dt[:, 0][..., None])                        # (B,H,P)
+        hT = h0 * dA[..., None, None] + jnp.einsum(
+            "bn,bhp->bhpn", Bm[:, 0].astype(jnp.float32), xdt)
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       hT)[:, None].astype(xh.dtype)
+    y = y + xh * bp["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, S, d_inner)
+    y = rmsnorm(bp["ln_out"], y * silu(z), cfg.norm_eps)
+    out = residual + dense(bp["out_proj"], y)
+    if conv_state is None:
+        return out
+    return out, (new_conv, hT)
+
+
+def forward(params, tokens, cfg, prefix_embeds=None, return_hidden=False,
+            **_):
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], tokens).astype(adt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(adt), x], axis=1)
+
+    from .common import scan_blocks_grouped
+    x = scan_blocks_grouped(
+        lambda bp, xx: _block_apply(bp, xx, cfg), x, params["blocks"],
+        remat=cfg.remat, group=cfg.remat_group, n_layers=cfg.n_layers)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.float32(0.0)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg, **_):
+    from .common import lm_loss_chunked
+    x, _ = forward(params, batch["tokens"], cfg,
+                   prefix_embeds=batch.get("prefix_embeds"),
+                   return_hidden=True)
+    P = x.shape[1] - batch["labels"].shape[1]
+    if P > 0:
+        x = x[:, P:]
+    w = (params["embed"]["w"] if cfg.tie_embeddings
+         else params["unembed"]["w"])
+    return lm_loss_chunked(x, w, batch["labels"], batch.get("mask"),
+                           tied=cfg.tie_embeddings)
+
+
+# -- serving -----------------------------------------------------------------
+
+def init_state(cfg, batch: int, dtype):
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    W = cfg.ssm.conv_width
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, W - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+    }
+
+
+def prefill(params, tokens, cfg, cache_len: int = 0, prefix_embeds=None,
+            **_):
+    """Returns (last_logits, state).  cache_len unused (state is O(1))."""
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], tokens).astype(adt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(adt), x], axis=1)
+    W = cfg.ssm.conv_width
+    Bsz = x.shape[0]
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+
+    def body(x, bp):
+        conv0 = jnp.zeros((Bsz, W - 1, conv_dim), x.dtype)
+        out, (conv_s, ssd_s) = _block_apply(bp, x, cfg, conv_state=conv0)
+        return out, (conv_s, ssd_s)
+
+    x, (conv_s, ssd_s) = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    last = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", last, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], last).astype(jnp.float32)
+    return logits, {"conv": conv_s, "ssd": ssd_s}
+
+
+def decode_step(params, token, state, pos, cfg):
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], token).astype(adt)
+
+    def body(x, bp_state):
+        bp, conv_s, ssd_s = bp_state
+        out, (conv_n, ssd_n) = _block_apply(bp, x, cfg, conv_state=conv_s,
+                                            ssd_state=ssd_s)
+        return out, (conv_n, ssd_n)
+
+    x, (conv_s, ssd_s) = jax.lax.scan(
+        body, x, (params["blocks"], state["conv"], state["ssd"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    return logits, {"conv": conv_s, "ssd": ssd_s}

@@ -1,0 +1,130 @@
+"""Gated MLPs (SwiGLU / GeGLU) and Mixture-of-Experts layers.
+
+MoE routing is dense-dispatch (one-hot combine einsums): every token's
+hidden state is dispatched to its top-k experts under a capacity limit.
+Expert weights are stacked on a leading E axis and sharded over the 'model'
+mesh axis; the dispatch einsums lower to all-to-all style resharding in SPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, init_dense, gelu, silu
+
+__all__ = ["init_mlp", "mlp", "init_moe", "moe"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d_model, d_ff, dtype),
+        "up": init_dense(k2, d_model, d_ff, dtype),
+        "down": init_dense(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(p, x, act: str = "silu"):
+    g = dense(p["gate"], x)
+    g = silu(g) if act == "silu" else gelu(g)
+    return dense(p["down"], g * dense(p["up"], x))
+
+
+def init_moe(key, cfg, dtype):
+    mo = cfg.moe
+    d, dff, E = cfg.d_model, mo.d_ff_expert, mo.num_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    import numpy as np
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": init_dense(kr, d, E, dtype),
+        "gate_w": (jax.random.normal(kg, (E, d, dff), jnp.float32)
+                   * scale).astype(dtype),
+        "up_w": (jax.random.normal(ku, (E, d, dff), jnp.float32)
+                 * scale).astype(dtype),
+        "down_w": (jax.random.normal(kd, (E, dff, d), jnp.float32)
+                   / np.sqrt(dff)).astype(dtype),
+    }
+    if mo.shared_expert:
+        p["shared"] = init_mlp(ks, d, cfg.d_ff, dtype)
+    return p
+
+
+def moe(p, x, cfg, act: str = "silu"):
+    """x: (B, S, d) -> (B, S, d); returns (y, aux_loss).
+
+    Group-local scatter/gather dispatch (GSPMD MoE pattern):
+      * tokens are grouped per batch row; routing, capacity queues and the
+        dispatch gather are GROUP-LOCAL (no global collectives);
+      * dispatch stage shards groups over (data x model) — every chip routes
+        its own groups;
+      * the (groups:'data', experts:'model') constraint before the expert
+        matmuls lowers to the canonical MoE all-to-all (~E*cap*d per chip),
+        and back after — measured 38x collective-bytes reduction vs a global
+        dispatch (EXPERIMENTS.md §Perf).
+    Capacity: cap = ceil(capacity_factor * S * k / E) per (group, expert);
+    dropped tokens pass through with zero expert contribution.
+    """
+    from ..train.meshctx import constrain_tokens, constrain_group_expert
+    mo = cfg.moe
+    B, S, d = x.shape
+    E, k = mo.num_experts, mo.top_k
+    G, Tg = B, S                                             # group = row
+    xt = constrain_tokens(x)                                 # (G, Tg, d)
+    logits = dense(p["router"], xt).astype(jnp.float32)      # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, k)                 # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    cap = max(1, -(-int(mo.capacity_factor * Tg * k) // E))
+    # per-(group, expert) queue positions
+    sel_flat = sel.reshape(G, Tg * k)
+    one_hot_e = jax.nn.one_hot(sel_flat, E, dtype=jnp.int32)  # (G, Tg*k, E)
+    pos_in_e = jnp.cumsum(one_hot_e, axis=1) - one_hot_e
+    pos = jnp.take_along_axis(
+        pos_in_e, sel_flat[..., None], axis=2)[..., 0]       # (G, Tg*k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep.reshape(G, Tg, k)
+
+    # group-local scatter of token ids into expert queues
+    slot = jnp.where(keep, sel_flat * cap + pos, E * cap)    # (G, Tg*k)
+    token_id = jnp.tile(jnp.arange(Tg)[:, None], (1, k)).reshape(1, Tg * k)
+    token_id = jnp.broadcast_to(token_id, (G, Tg * k))
+    slot_token = jnp.full((G, E * cap + 1), Tg, dtype=jnp.int32)
+    slot_token = jax.vmap(lambda st, sl, ti: st.at[sl].set(ti))(
+        slot_token, slot, token_id)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((G, 1, d), xt.dtype)], axis=1)
+    xe = jax.vmap(lambda xg, st: xg[st[:-1]])(xt_pad, slot_token)
+    xe = xe.reshape(G, E, cap, d)
+    xe = constrain_tokens(xe)                # dispatch: groups everywhere
+    xe = constrain_group_expert(xe)          # -> all-to-all to expert shards
+
+    g = jnp.einsum("gecd,edf->gecf", xe, p["gate_w"],
+                   preferred_element_type=jnp.float32).astype(xt.dtype)
+    u = jnp.einsum("gecd,edf->gecf", xe, p["up_w"],
+                   preferred_element_type=jnp.float32).astype(xt.dtype)
+    h = (silu(g) if act == "silu" else gelu(g)) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down_w"],
+                    preferred_element_type=jnp.float32).astype(xt.dtype)
+    ye = constrain_group_expert(ye)
+    ye = constrain_tokens(ye)                # all-to-all back to token shards
+
+    # group-local combine
+    ye_flat = ye.reshape(G, E * cap, d)
+    ye_flat = jnp.concatenate([ye_flat, jnp.zeros((G, 1, d), ye.dtype)],
+                              axis=1)
+    yk = jax.vmap(lambda yg, sl: yg[sl])(ye_flat, slot)      # (G, Tg*k, d)
+    yk = yk.reshape(G, Tg, k, d)
+    yt = jnp.einsum("gtkd,gtk->gtd", yk, gate_vals.astype(jnp.float32)
+                    ).astype(xt.dtype)
+    y = yt.reshape(B, S, d)
+    if mo.shared_expert:
+        y = y + mlp(p["shared"], x, act)
+
+    # load-balance auxiliary loss (Switch style)
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.mean(jax.nn.one_hot(sel[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return y, aux

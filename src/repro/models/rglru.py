@@ -1,0 +1,378 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention
+(arXiv:2402.19427), pattern (rec, rec, attn) — 1 attention per 2 recurrent.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          # input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))      # in (0,1), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan (log-depth parallel linear
+recurrence); decode is the O(1) step.  Layer stacking scans over homogeneous
+pattern groups; remainder layers run unscanned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, decode_attention, init_attention
+from .common import (DTYPES, dense, embed, init_dense, init_embed,
+                     init_rmsnorm, rmsnorm, silu, softmax_xent)
+from .mlp import init_mlp, mlp
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_cache"]
+
+LRU_C = 8.0
+
+
+def _lru_width(cfg):
+    return cfg.recurrent.lru_width or cfg.d_model
+
+
+def _init_rec_block(key, cfg, dtype):
+    d, w = cfg.d_model, _lru_width(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "ln": init_rmsnorm(d, dtype),
+        "in_x": init_dense(k1, d, w, dtype),
+        "in_gate": init_dense(k2, d, w, dtype),
+        "conv_w": (jax.random.normal(k3, (4, w), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": init_dense(k4, w, w, dtype),
+        "gate_x": init_dense(k5, w, w, dtype),
+        "lam": jnp.full((w,), 0.5, jnp.float32),   # Lambda (pre-softplus)
+        "out": init_dense(k6, w, d, dtype),
+        "ln2": init_rmsnorm(d, dtype),
+    }
+
+
+def _init_attn_block(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(ka, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def _init_mlp_part(key, cfg, dtype):
+    return init_mlp(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _pattern(cfg):
+    pat = cfg.recurrent.pattern
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def _group_split(cfg):
+    """n_layers = G full pattern repeats + a tail of pattern[:tail_n]."""
+    plen = len(cfg.recurrent.pattern)
+    G = cfg.n_layers // plen
+    tail_n = cfg.n_layers - G * plen
+    return G, tail_n
+
+
+def _init_layer(key, kind, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    blk = (_init_rec_block(k1, cfg, dtype) if kind == "rec"
+           else _init_attn_block(k1, cfg, dtype))
+    blk["mlp"] = _init_mlp_part(k2, cfg, dtype)
+    return blk
+
+
+def init_params(key, cfg):
+    """Pattern groups are stacked on a leading (G,) axis so the layer stack
+    runs as ONE lax.scan over groups (python-unrolled layers defeat buffer
+    reuse — 300+GB/chip at train_4k; EXPERIMENTS.md §Perf R1)."""
+    dtype = DTYPES[cfg.param_dtype]
+    ke, kb, kt, ko = jax.random.split(key, 4)
+    pat = cfg.recurrent.pattern
+    G, tail_n = _group_split(cfg)
+    groups = []
+    for p, kind in enumerate(pat):
+        keys = jax.random.split(jax.random.fold_in(kb, p), G)
+        groups.append(jax.vmap(
+            lambda k: _init_layer(k, kind, cfg, dtype))(keys))
+    tail = [
+        _init_layer(jax.random.fold_in(kt, i), pat[i % len(pat)], cfg, dtype)
+        for i in range(tail_n)]
+    p = {"embed": init_embed(ke, cfg.padded_vocab, cfg.d_model, dtype),
+         "groups": tuple(groups), "tail": tail,
+         "ln_f": init_rmsnorm(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_dense(ko, cfg.d_model, cfg.padded_vocab, dtype)
+    return p
+
+
+def layer_params(params, cfg, i: int):
+    """Per-layer view (group slice or tail entry) for serve paths."""
+    pat = cfg.recurrent.pattern
+    plen = len(pat)
+    G, tail_n = _group_split(cfg)
+    if i < G * plen:
+        g, p = divmod(i, plen)
+        return jax.tree.map(lambda a: a[g], params["groups"][p])
+    return params["tail"][i - G * plen]
+
+
+def _conv_stream(x, w, b, state=None):
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    if state is None:
+        return y
+    return y, xp[:, -(W - 1):]
+
+
+def _gates(bp, xb):
+    """RG-LRU gate math for a (B, T, w) slice -> (a, b) recurrence coeffs."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(dense(bp["gate_a"], xb).astype(f32))
+    i = jax.nn.sigmoid(dense(bp["gate_x"], xb).astype(f32))
+    log_a = -LRU_C * jax.nn.softplus(bp["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xb.astype(f32))
+    return a, b
+
+
+def _rglru(bp, xb, h0=None, chunk: int = 256):
+    """xb (B,S,w) conv'd branch input; returns (y, h_last).
+
+    Chunked linear recurrence: lax.scan over sequence chunks carrying the
+    boundary state; gates AND the associative scan are computed per chunk
+    under jax.checkpoint, so live f32 intermediates are O(B * chunk * w)
+    instead of O(B * S * w) x ~6 tensors x log2(S) levels (the naive
+    full-sequence version cost 300+GB/chip at train_4k; EXPERIMENTS §Perf).
+    """
+    f32 = jnp.float32
+    if xb.shape[1] == 1 and h0 is not None:
+        a, b = _gates(bp, xb)
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None].astype(xb.dtype), h
+    B, S, w = xb.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, w), f32)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad), (0, 0)))
+    xc = jnp.moveaxis(xb.reshape(B, nc, Q, w), 1, 0)
+
+    @jax.checkpoint  # recompute gates + within-chunk scan in bwd, one chunk
+    def chunk_fn(h, xj):
+        aj, bj = _gates(bp, xj)
+        bj = bj.at[:, 0].add(aj[:, 0] * h)
+        _, hs = jax.lax.associative_scan(combine, (aj, bj), axis=1)
+        return hs
+
+    def body(h, xj):
+        hs = chunk_fn(h, xj)
+        return hs[:, -1], hs.astype(xb.dtype)
+
+    h_last, hs = jax.lax.scan(body, h0, xc)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, nc * Q, w)[:, :S]
+    return h, h_last
+
+
+def _rec_apply(bp, x, cfg, conv_state=None, lru_state=None):
+    from ..train.meshctx import constrain_batch
+    x = constrain_batch(x)
+    res = x
+    xi = rmsnorm(bp["ln"], x, cfg.norm_eps)
+    xb = dense(bp["in_x"], xi)
+    gate = dense(bp["in_gate"], xi)
+    if conv_state is None:
+        xb = _conv_stream(xb, bp["conv_w"], bp["conv_b"])
+        new_conv = None
+    else:
+        xb, new_conv = _conv_stream(xb, bp["conv_w"], bp["conv_b"],
+                                    state=conv_state)
+    y, h_last = _rglru(bp, xb, lru_state)
+    y = y * silu(gate)
+    x = res + dense(bp["out"], y)
+    hin = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    x = x + mlp(bp["mlp"], hin, cfg.act)
+    if conv_state is None:
+        return x
+    return x, (new_conv, h_last)
+
+
+def _attn_apply(bp, x, positions, cfg, kv_chunk=512):
+    from ..train.meshctx import constrain_batch
+    x = constrain_batch(x)
+    h = attention(bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), positions,
+                  cfg, kv_chunk=kv_chunk)
+    x = x + h
+    x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg.act)
+    return x
+
+
+def forward(params, tokens, cfg, prefix_embeds=None, kv_chunk=512,
+            return_hidden=False):
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], tokens).astype(adt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(adt), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    pat = cfg.recurrent.pattern
+    NP = jax.checkpoint_policies.nothing_saveable
+
+    def apply_kind(kind, b, xx):
+        if kind == "rec":
+            return _rec_apply(b, xx, cfg)
+        return _attn_apply(b, xx, positions, cfg, kv_chunk)
+
+    def group_fn(gparams, xx):
+        for p, kind in enumerate(pat):
+            fn = functools.partial(apply_kind, kind)
+            if cfg.remat:
+                fn = jax.checkpoint(fn, policy=NP)
+            xx = fn(gparams[p], xx)
+        return xx
+
+    def gbody(xx, gparams):
+        fn = group_fn
+        if cfg.remat:
+            fn = jax.checkpoint(group_fn, policy=NP)
+        return fn(gparams, xx), None
+
+    x, _ = jax.lax.scan(gbody, x, params["groups"])
+    G, tail_n = _group_split(cfg)
+    for i in range(tail_n):
+        kind = pat[i % len(pat)]
+        fn = functools.partial(apply_kind, kind)
+        if cfg.remat:
+            fn = jax.checkpoint(fn, policy=NP)
+        x = fn(params["tail"][i], x)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.float32(0.0)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg, **_):
+    from .common import lm_loss_chunked
+    x, _ = forward(params, batch["tokens"], cfg,
+                   prefix_embeds=batch.get("prefix_embeds"),
+                   return_hidden=True)
+    P = x.shape[1] - batch["labels"].shape[1]
+    if P > 0:
+        x = x[:, P:]
+    w = (params["embed"]["w"] if cfg.tie_embeddings
+         else params["unembed"]["w"])
+    return lm_loss_chunked(x, w, batch["labels"], batch.get("mask"),
+                           tied=cfg.tie_embeddings)
+
+
+# -- serving -----------------------------------------------------------------
+
+def init_cache(cfg, batch: int, cache_len: int, dtype):
+    """Mixed cache: per-layer entries (attention KV ring / LRU+conv state)."""
+    w = _lru_width(cfg)
+    hd = cfg.resolved_head_dim
+    cache = []
+    for kind in _pattern(cfg):
+        if kind == "attn":
+            win = min(cache_len, cfg.window or cache_len)
+            cache.append({
+                "k": jnp.zeros((batch, win, cfg.n_kv, hd), dtype),
+                "v": jnp.zeros((batch, win, cfg.n_kv, hd), dtype)})
+        else:
+            cache.append({
+                "conv": jnp.zeros((batch, 3, w), dtype),
+                "h": jnp.zeros((batch, w), jnp.float32)})
+    return cache
+
+
+def prefill(params, tokens, cfg, cache_len: int, prefix_embeds=None,
+            kv_chunk=512):
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], tokens).astype(adt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(adt), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    hd = cfg.resolved_head_dim
+    pat = _pattern(cfg)
+    cache = []
+    for i in range(cfg.n_layers):
+        bp = layer_params(params, cfg, i)
+        if pat[i] == "rec":
+            conv0 = jnp.zeros((B, 3, _lru_width(cfg)), x.dtype)
+            x, (conv_s, h_s) = _rec_apply(bp, x, cfg, conv_state=conv0)
+            cache.append({"conv": conv_s, "h": h_s})
+        else:
+            h, (k, v) = attention(
+                bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), positions,
+                cfg, kv_chunk=kv_chunk, with_cache=True)
+            x = x + h
+            x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps),
+                        cfg.act)
+            win = min(cache_len, cfg.window or cache_len)
+            take = min(win, S)
+            ks = jnp.zeros((B, win, cfg.n_kv, hd), k.dtype)
+            vs = jnp.zeros((B, win, cfg.n_kv, hd), v.dtype)
+            src_pos = S - take + jnp.arange(take)
+            slots = jnp.mod(src_pos, win)
+            ks = ks.at[:, slots].set(k[:, S - take:])
+            vs = vs.at[:, slots].set(v[:, S - take:])
+            cache.append({"k": ks, "v": vs})
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    last = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", last, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], last).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params, token, cache, pos, cfg):
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], token).astype(adt)
+    pat = _pattern(cfg)
+    new_cache = []
+    for i in range(cfg.n_layers):
+        bp = layer_params(params, cfg, i)
+        c = cache[i]
+        if pat[i] == "rec":
+            x, (conv_s, h_s) = _rec_apply(bp, x, cfg, conv_state=c["conv"],
+                                          lru_state=c["h"])
+            new_cache.append({"conv": conv_s, "h": h_s})
+        else:
+            h, ck, cv = decode_attention(
+                bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                c["k"], c["v"], pos, cfg)
+            x = x + h
+            x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps),
+                        cfg.act)
+            new_cache.append({"k": ck, "v": cv})
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,232 @@
+"""Decoder-only transformer assembly (dense + MoE families, VLM prefix).
+
+Params layout (scan_layers=True): every block parameter is stacked on a
+leading (n_layers,) axis and the stack is executed with jax.lax.scan — HLO
+size and compile time are O(1) in depth (MaxText-style), remat-able per
+layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, decode_attention, init_attention
+from .common import (DTYPES, dense, embed, init_dense, init_embed,
+                     init_rmsnorm, rmsnorm, softmax_xent)
+from .mlp import init_mlp, init_moe, mlp, moe
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_cache"]
+
+
+def _init_block(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(ka, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(km, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg):
+    dtype = DTYPES[cfg.param_dtype]
+    ke, kb, ko = jax.random.split(key, 3)
+    if cfg.scan_layers:
+        keys = jax.random.split(kb, cfg.n_layers)
+        blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(keys)
+    else:
+        blocks = [_init_block(k, cfg, dtype)
+                  for k in jax.random.split(kb, cfg.n_layers)]
+    p = {
+        "embed": init_embed(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "ln_f": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_dense(ko, cfg.d_model, cfg.padded_vocab, dtype)
+    return p
+
+
+def _block_apply(bp, x, positions, cfg, kv_chunk=512):
+    from ..train.meshctx import constrain_batch
+    x = constrain_batch(x)
+    h = attention(bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), positions,
+                  cfg, kv_chunk=kv_chunk)
+    x = x + h
+    hin = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = moe(bp["moe"], hin, cfg, cfg.act)
+    else:
+        m, aux = mlp(bp["mlp"], hin, cfg.act), jnp.float32(0.0)
+    return x + m, aux
+
+
+def forward(params, tokens, cfg, prefix_embeds=None, kv_chunk=512,
+            return_hidden=False):
+    """tokens (B, S) int32 -> logits (B, S_total, V).
+
+    prefix_embeds (B, P, d): modality-frontend stub output (vlm/audio),
+    prepended before the token embeddings.  return_hidden skips the unembed
+    (the chunked LM loss applies it per sequence chunk instead).
+    """
+    from ..train.meshctx import constrain_batch
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], tokens).astype(adt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(adt), x], axis=1)
+    x = constrain_batch(x)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.float32(0.0)
+    if cfg.scan_layers:
+        from .common import scan_blocks_grouped
+
+        def block_fn(bp, carry):
+            x, aux = carry
+            xn, a = _block_apply(bp, x, positions, cfg, kv_chunk)
+            return (xn, aux + a)
+
+        x, aux_total = scan_blocks_grouped(
+            block_fn, (x, aux_total), params["blocks"], remat=cfg.remat,
+            group=cfg.remat_group, n_layers=cfg.n_layers)
+    else:
+        for bp in params["blocks"]:
+            x, a = _block_apply(bp, x, positions, cfg, kv_chunk)
+            aux_total = aux_total + a
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    return logits, aux_total
+
+
+def loss_fn(params, batch, cfg, kv_chunk=512):
+    """batch: {tokens (B,S), labels (B,S), mask (B,S)} (+ prefix_embeds)."""
+    from .common import lm_loss_chunked
+    x, aux = forward(params, batch["tokens"], cfg,
+                     prefix_embeds=batch.get("prefix_embeds"),
+                     kv_chunk=kv_chunk, return_hidden=True)
+    P = x.shape[1] - batch["labels"].shape[1]
+    if P > 0:  # frontend prefix positions carry no next-token loss
+        x = x[:, P:]
+    w = (params["embed"]["w"] if cfg.tie_embeddings
+         else params["unembed"]["w"])
+    ce = lm_loss_chunked(x, w, batch["labels"], batch.get("mask"),
+                         tied=cfg.tie_embeddings)
+    return ce + 0.01 * aux
+
+
+# -- serving ------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, cache_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, tokens, cfg, cache_len: int, prefix_embeds=None,
+            kv_chunk=512):
+    """Run the prompt, return (last_logits, cache).
+
+    The cache stores each layer's K/V in ring layout (slot = pos % cache_len)
+    so decode_step can continue seamlessly for both full and local attention.
+    """
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], tokens).astype(adt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(adt), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    hd = cfg.resolved_head_dim
+
+    def one_block(bp, x):
+        h, (k, v) = attention(bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                              positions, cfg, kv_chunk=kv_chunk,
+                              with_cache=True)
+        x = x + h
+        hin = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe(bp["moe"], hin, cfg, cfg.act)
+        else:
+            m = mlp(bp["mlp"], hin, cfg.act)
+        # ring layout: position p -> slot p % cache_len (take the last
+        # cache_len positions; older ones are out of any window anyway)
+        take = min(cache_len, S)
+        ks = jnp.zeros((B, cache_len, cfg.n_kv, hd), k.dtype)
+        vs = jnp.zeros((B, cache_len, cfg.n_kv, hd), v.dtype)
+        src_pos = S - take + jnp.arange(take)
+        slots = jnp.mod(src_pos, cache_len)
+        ks = ks.at[:, slots].set(k[:, S - take:])
+        vs = vs.at[:, slots].set(v[:, S - take:])
+        return x + m, (ks, vs)
+
+    if cfg.scan_layers:
+        def body(x, bp):
+            xn, kv = one_block(bp, x)
+            return xn, kv
+        x, (ck, cv) = jax.lax.scan(body, x, params["blocks"])
+    else:
+        cks, cvs = [], []
+        for bp in params["blocks"]:
+            x, (k1, v1) = one_block(bp, x)
+            cks.append(k1); cvs.append(v1)
+        ck, cv = jnp.stack(cks), jnp.stack(cvs)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    last = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", last, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], last).astype(jnp.float32)
+    return logits, {"k": ck, "v": cv}
+
+
+def decode_step(params, token, cache, pos, cfg):
+    """One decode step.  token (B, 1) int32; pos: absolute position (traced
+    scalar); returns (logits (B,1,V), new cache)."""
+    adt = DTYPES[cfg.activation_dtype]
+    x = embed(params["embed"], token).astype(adt)
+
+    def one_block(x, bp_kv):
+        bp, (ck, cv) = bp_kv
+        h, ck, cv = decode_attention(
+            bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), ck, cv, pos, cfg)
+        x = x + h
+        hin = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe(bp["moe"], hin, cfg, cfg.act)
+        else:
+            m = mlp(bp["mlp"], hin, cfg.act)
+        return x + m, (ck, cv)
+
+    if cfg.scan_layers:
+        def body(x, bp_kv):
+            xn, kv = one_block(x, bp_kv)
+            return xn, kv
+        x, (ck, cv) = jax.lax.scan(body, x,
+                                   (params["blocks"],
+                                    (cache["k"], cache["v"])))
+    else:
+        cks, cvs = [], []
+        for i, bp in enumerate(params["blocks"]):
+            x, (k1, v1) = one_block(x, (bp, (cache["k"][i], cache["v"][i])))
+            cks.append(k1); cvs.append(v1)
+        ck, cv = jnp.stack(cks), jnp.stack(cvs)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["unembed"], x).astype(jnp.float32)
+    return logits, {"k": ck, "v": cv}

@@ -1,0 +1,92 @@
+"""Distributed SpTRSV via shard_map: rows of each step sharded over a mesh
+axis; x is replicated and re-synchronized with one all_gather per step.
+
+The collective count is therefore proportional to the number of steps —
+i.e. to the level count the paper's transformation minimizes.  On a TPU
+mesh the transformation's "95% fewer synchronization barriers" is literally
+"95% fewer all_gathers" here (EXPERIMENTS.md §Perf quantifies this from the
+lowered HLO).
+
+The schedule's chunk dimension C must be divisible by the axis size; each
+device owns C/devices lanes of every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .levelset import DeviceSchedule
+from .schedule import LevelSchedule
+
+__all__ = ["solve_sharded", "lower_sharded"]
+
+
+def _sharded_body(c_pad, *leaves, n, n_carry, axis):
+    (row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out, c_ids,
+     is_final) = leaves
+    C_local = row_ids.shape[1]
+    x0 = jnp.zeros((n + 1,), dtype=c_pad.dtype)
+    carry0 = jnp.zeros((n_carry + 2,), dtype=c_pad.dtype)
+    # loop carries become device-varying after the per-step all_gather;
+    # mark the (identical) initial values as varying to match
+    x0 = jax.lax.pcast(x0, (axis,), to="varying")
+    carry0 = jax.lax.pcast(carry0, (axis,), to="varying")
+
+    def body(state, s_leaves):
+        x, carry = state
+        (rids, didx, dcoef, dnv, cin, cout, cids, fin) = s_leaves
+        gathered = x[didx]                              # (C_local, D)
+        partial = jnp.sum(dcoef * gathered, axis=-1)
+        tot = partial + carry[cin]
+        xi = (c_pad[cids] - tot) * dnv
+        # publish this step's results to every device: one collective per
+        # step — the quantity the graph transformation minimizes
+        xi_all = jax.lax.all_gather(xi, axis, tiled=True)        # (C,)
+        rids_all = jax.lax.all_gather(rids, axis, tiled=True)
+        tot_all = jax.lax.all_gather(tot, axis, tiled=True)
+        cout_all = jax.lax.all_gather(cout, axis, tiled=True)
+        x = x.at[rids_all].set(xi_all)
+        carry = carry.at[cout_all].set(tot_all)
+        return (x, carry), None
+
+    (x, _), _ = jax.lax.scan(body, (x0, carry0), leaves)
+    return x[:n]
+
+
+def solve_sharded(sched: LevelSchedule, c: np.ndarray, mesh: Mesh,
+                  axis: str = "model") -> np.ndarray:
+    """Solve with step lanes sharded over `axis` of `mesh`."""
+    fn = lower_sharded(sched, mesh, axis=axis)
+    return np.asarray(fn(jnp.asarray(c, dtype=sched.dep_coef.dtype)))
+
+
+def lower_sharded(sched: LevelSchedule, mesh: Mesh, axis: str = "model"):
+    """Build the jitted sharded solver fn(c) -> x for a fixed schedule."""
+    nshards = mesh.shape[axis]
+    assert sched.chunk % nshards == 0, \
+        f"chunk {sched.chunk} not divisible by axis size {nshards}"
+    ds = DeviceSchedule(sched)
+    leaves = ds.leaves()
+    # lanes sharded over the chunk dimension; indices/carries replicated math
+    lane_spec = tuple(
+        P(None, axis) if l.ndim == 2 else P(None, axis, None) for l in leaves)
+    body = functools.partial(_sharded_body, n=ds.n, n_carry=ds.n_carry,
+                             axis=axis)
+    shmapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(),) + lane_spec,
+        out_specs=P(),
+        # x ends replicated (every device applies the same gathered
+        # updates), but the varying-axis tracker can't prove it
+        check_vma=False)
+
+    @jax.jit
+    def run(c):
+        c_pad = jnp.concatenate([c, jnp.zeros((1,), c.dtype)])
+        return shmapped(c_pad, *leaves)
+
+    return run

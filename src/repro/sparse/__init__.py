@@ -1,0 +1,9 @@
+from .csr import CSR, from_coo, identity, tril
+from .levels import LevelSets, build_levels, level_costs, row_costs
+from . import generators, io
+
+__all__ = [
+    "CSR", "from_coo", "identity", "tril",
+    "LevelSets", "build_levels", "level_costs", "row_costs",
+    "generators", "io",
+]

@@ -1,0 +1,8 @@
+from . import checkpoint, compression, data, optimizer, resilience, sharding
+from .optimizer import AdamWConfig
+from .train_step import init_state, make_serve_fns, make_train_step, \
+    state_shardings
+
+__all__ = ["checkpoint", "compression", "data", "optimizer", "resilience",
+           "sharding", "AdamWConfig", "init_state", "make_serve_fns",
+           "make_train_step", "state_shardings"]

@@ -1,0 +1,128 @@
+"""Step-atomic checkpointing with manifest commit + async save.
+
+Layout:
+    <dir>/step_000123/shard_<host>.npz     flat param/opt arrays
+    <dir>/step_000123/MANIFEST.json        committed LAST (atomic rename)
+
+A checkpoint without MANIFEST.json is incomplete (crashed save) and is
+ignored by restore/latest_step — this is the crash-consistency contract the
+resilience layer relies on.  Saves can run on a background thread
+(async_save) so the train loop is not blocked; the previous async save is
+joined before a new one starts (bounded staleness of 1).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "Checkpointer"]
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(tree_like, arrays: dict):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = arrays[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str | Path, step: int, state, host_id: int = 0,
+         extra: dict | None = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}_{host_id}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    final.mkdir(parents=True, exist_ok=True)
+    arrays = _flatten(state)
+    np.savez(tmp / f"shard_{host_id}.npz", **arrays)
+    os.replace(tmp / f"shard_{host_id}.npz", final / f"shard_{host_id}.npz")
+    shutil.rmtree(tmp, ignore_errors=True)
+    # manifest commit (host 0)
+    if host_id == 0:
+        manifest = {"step": step, "time": time.time(),
+                    "keys": sorted(arrays.keys()), **(extra or {})}
+        mtmp = final / ".MANIFEST.tmp"
+        mtmp.write_text(json.dumps(manifest))
+        os.replace(mtmp, final / "MANIFEST.json")
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for d in ckpt_dir.iterdir():
+        if d.name.startswith("step_") and (d / "MANIFEST.json").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, state_like, step: int | None = None,
+            host_id: int = 0):
+    """Restore into the structure of `state_like` (shapes must match)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    assert (d / "MANIFEST.json").exists(), f"uncommitted checkpoint {d}"
+    arrays = dict(np.load(d / f"shard_{host_id}.npz"))
+    return _unflatten_into(state_like, arrays), step
+
+
+class Checkpointer:
+    """Async checkpoint manager with retention."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3,
+                 host_id: int = 0):
+        self.dir = Path(ckpt_dir)
+        self.keep = keep
+        self.host_id = host_id
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, state, extra: dict | None = None):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # device->host copy now
+
+        def work():
+            save(self.dir, step, host_state, self.host_id, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.name.split("_")[1]) for d in self.dir.iterdir()
+            if d.name.startswith("step_") and (d / "MANIFEST.json").exists())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

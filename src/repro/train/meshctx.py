@@ -1,0 +1,108 @@
+"""Global mesh context for in-model sharding anchors.
+
+GSPMD propagates shardings from inputs, but loop carries seeded from fresh
+broadcasts (flash-attention accumulators, scan-carried hidden states) can
+collapse to replicated — catastrophic at global-batch scale.  Models call
+`constrain_batch` at block boundaries to anchor the batch dimension; the
+launcher/dry-run sets the context before tracing.  No-op when unset (pure
+single-device tests are unaffected).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["set_mesh_context", "clear_mesh_context", "constrain_batch",
+           "constrain_tokens", "constrain_group_expert", "model_axis_size",
+           "mesh_context"]
+
+
+def model_axis_size(model_axis: str = "model") -> int:
+    """Size of the model axis in the active context (1 when unset)."""
+    if _CTX is None:
+        return 1
+    mesh, _ = _CTX
+    return int(mesh.shape.get(model_axis, 1))
+
+_CTX: tuple[Mesh, tuple[str, ...]] | None = None
+
+
+def set_mesh_context(mesh: Mesh, batch_axes: tuple[str, ...] = ("data",)):
+    global _CTX
+    _CTX = (mesh, tuple(batch_axes))
+
+
+def clear_mesh_context():
+    global _CTX
+    _CTX = None
+
+
+class mesh_context:
+    def __init__(self, mesh, batch_axes=("data",)):
+        self.mesh, self.axes = mesh, batch_axes
+
+    def __enter__(self):
+        set_mesh_context(self.mesh, self.axes)
+        return self
+
+    def __exit__(self, *exc):
+        clear_mesh_context()
+
+
+def constrain_tokens(x, dim: int = 0, model_axis: str = "model"):
+    """Shard a token-group dim over as many mesh axes as divisibility
+    allows (data axes + model) — used by the MoE dispatch stage."""
+    if _CTX is None or not hasattr(x, "ndim") or x.ndim == 0:
+        return x
+    mesh, baxes = _CTX
+    cands = [tuple(baxes) + (model_axis,), tuple(baxes), (model_axis,)]
+    for axes in cands:
+        if not all(a in mesh.shape for a in axes):
+            continue
+        sz = int(np.prod([mesh.shape[a] for a in axes]))
+        if x.shape[dim] % sz == 0 and x.shape[dim] >= sz:
+            entries: list = [None] * x.ndim
+            entries[dim] = axes if len(axes) > 1 else axes[0]
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*entries)))
+    return x
+
+
+def constrain_group_expert(x, g_dim: int = 0, e_dim: int = 1,
+                           model_axis: str = "model"):
+    """Shard (groups over data axes, experts over model) — the MoE expert-
+    compute stage; the transition from constrain_tokens lowers to the
+    canonical MoE all-to-all."""
+    if _CTX is None or not hasattr(x, "ndim") or x.ndim == 0:
+        return x
+    mesh, baxes = _CTX
+    entries: list = [None] * x.ndim
+    bsz = int(np.prod([mesh.shape[a] for a in baxes]))
+    if x.shape[g_dim] % bsz == 0 and x.shape[g_dim] >= bsz:
+        entries[g_dim] = tuple(baxes) if len(baxes) > 1 else baxes[0]
+    if (model_axis in mesh.shape
+            and x.shape[e_dim] % mesh.shape[model_axis] == 0):
+        entries[e_dim] = model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_batch(x, batch_dim: int = 0, model_dim: int | None = None,
+                    model_axis: str = "model"):
+    """Anchor x's batch dim to the data-parallel axes and (optionally) a
+    tensor dim to the model axis — both only when divisible."""
+    if _CTX is None or not hasattr(x, "ndim"):
+        return x
+    mesh, baxes = _CTX
+    sz = int(np.prod([mesh.shape[a] for a in baxes]))
+    if x.ndim == 0 or x.shape[batch_dim] % sz != 0 or x.shape[batch_dim] < sz:
+        return x
+    entries: list = [None] * x.ndim
+    entries[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+    if (model_dim is not None and model_axis in mesh.shape
+            and x.shape[model_dim] % mesh.shape[model_axis] == 0):
+        entries[model_dim] = model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,102 @@
+"""Sharding rules: parameter-path-pattern -> PartitionSpec.
+
+Scheme (DESIGN.md §6): 2D sharding — tensor-parallel dims over 'model',
+FSDP dims over 'data'; the multi-pod 'pod' axis carries data parallelism
+(batch) only, with params replicated across pods (gradients all-reduce over
+'pod' implicitly via pjit).  Every rule degrades gracefully: an axis is only
+applied if the dimension is divisible by the mesh axis size (replicate
+otherwise) — this keeps every (arch x shape x mesh) cell lowerable even for
+odd head counts / vocab sizes.
+
+Scan-stacked block params carry a leading n_layers axis: rules are written
+for the unstacked shape and a leading None is prepended automatically.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "logical_rules",
+           "spec_for_path"]
+
+# (path regex, spec for the UNSTACKED tensor, applied right-aligned)
+RULES: list[tuple[str, tuple]] = [
+    (r"embed/w$",               ("model", "data")),    # (V, d)
+    (r"unembed/w$",             ("data", "model")),    # (d, V)
+    (r"attn/[qkv]/w$",          ("data", "model")),    # (d, H*hd)
+    (r"attn/o/w$",              ("model", "data")),    # (H*hd, d)
+    (r"cross/[qkv]/w$",         ("data", "model")),
+    (r"cross/o/w$",             ("model", "data")),
+    (r"(mlp|shared)/(gate|up)/w$", ("data", "model")),  # (d, ff)
+    (r"(mlp|shared)/down/w$",   ("model", "data")),     # (ff, d)
+    (r"moe/router/w$",          ("data", None)),
+    (r"moe/(gate_w|up_w)$",     ("model", "data", None)),  # (E, d, f)
+    (r"moe/down_w$",            ("model", None, "data")),  # (E, f, d)
+    (r"in_proj/w$",             ("data", "model")),
+    (r"out_proj/w$",            ("model", "data")),
+    (r"(in_x|in_gate)/w$",      ("data", "model")),
+    (r"(gate_a|gate_x)/w$",     (None, "model")),
+    (r"out/w$",                 ("model", "data")),
+    # everything else (norms, biases, convs, lam, A_log, D, dt_bias): replicate
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, shape: tuple, mesh: Mesh,
+                  fsdp_axis: str = "data", tp_axis: str = "model") -> P:
+    axis_map = {"data": fsdp_axis, "model": tp_axis}
+    for pat, rule in RULES:
+        if re.search(pat, path_str):
+            nlead = len(shape) - len(rule)
+            entries: list = [None] * nlead
+            for dim, ax in zip(shape[nlead:], rule):
+                if ax is None:
+                    entries.append(None)
+                    continue
+                ax_name = axis_map[ax]
+                if ax_name in mesh.shape and dim % mesh.shape[ax_name] == 0:
+                    entries.append(ax_name)
+                else:
+                    entries.append(None)
+            return P(*entries)
+    return P()
+
+
+def param_specs(params_shape, mesh: Mesh, fsdp_axis: str = "data",
+                tp_axis: str = "model"):
+    """PartitionSpec tree matching a params (or ShapeDtypeStruct) tree."""
+    def one(path, leaf):
+        return spec_for_path(_path_str(path), leaf.shape, mesh,
+                             fsdp_axis, tp_axis)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape, mesh: Mesh, **kw):
+    specs = param_specs(params_shape, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(mesh: Mesh, multi_pod: bool | None = None):
+    """Batch dimension spec: data parallel over ('pod','data')."""
+    if multi_pod is None:
+        multi_pod = "pod" in mesh.shape
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def logical_rules(mesh: Mesh):  # documentation helper
+    return {pat: rule for pat, rule in RULES}

@@ -1,0 +1,128 @@
+"""train_step / serve_step builders with pjit shardings.
+
+make_train_step: loss -> grads -> AdamW, with optional microbatch gradient
+accumulation (lax.scan over microbatches — compute/comm overlap comes from
+XLA pipelining the per-microbatch FSDP all-gathers against the previous
+microbatch's compute) and optional int8 error-feedback compression of the
+cross-pod gradient reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.api import get_model
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .sharding import batch_specs, param_shardings, param_specs
+
+__all__ = ["make_train_step", "make_serve_fns", "TrainState", "init_state"]
+
+TrainState = dict  # {"params": ..., "opt": ..., "residuals": optional}
+
+
+def init_state(key, cfg, opt_cfg: AdamWConfig | None = None):
+    model = get_model(cfg)
+    params = model.init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def state_shardings(state_shape, mesh: Mesh):
+    """NamedSharding tree for a TrainState shape tree."""
+    def for_params(tree):
+        return param_shardings(tree, mesh)
+    out = {
+        "params": for_params(state_shape["params"]),
+        "opt": {
+            "m": for_params(state_shape["opt"]["m"]),
+            "v": for_params(state_shape["opt"]["v"]),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+    if "residuals" in state_shape:
+        out["residuals"] = for_params(state_shape["residuals"])
+    return out
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    bspec = batch_specs(mesh)
+    def one(leaf):
+        entries = [bspec] + [None] * (len(leaf.shape) - 1)
+        # guard divisibility of the batch dim
+        import numpy as np
+        sz = int(np.prod([mesh.shape[a] for a in bspec]))
+        if leaf.shape[0] % sz != 0:
+            entries[0] = None
+        return NamedSharding(mesh, P(*entries))
+    return jax.tree.map(one, batch_shape)
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, microbatch: int = 1,
+                    compress_pod: bool = False) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatch: number of gradient-accumulation slices (must divide the
+    global batch).  compress_pod: int8 EF compression of the cross-pod
+    gradient mean (requires state["residuals"]; multi-pod mesh).
+    """
+    model = get_model(cfg)
+    loss_fn = functools.partial(model.loss_fn, cfg=cfg)
+
+    def compute_grads(params, batch):
+        if microbatch <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def slice_mb(i, leaf):
+            mb = leaf.shape[0] // microbatch
+            return jax.lax.dynamic_slice_in_dim(leaf, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            loss_acc, g_acc = carry
+            mb = jax.tree.map(functools.partial(slice_mb, i), batch)
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            return (loss_acc + l, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), g0),
+                                        jnp.arange(microbatch))
+        inv = 1.0 / microbatch
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state, batch):
+        loss, grads = compute_grads(state["params"], batch)
+        new_residuals = None
+        if compress_pod and "residuals" in state:
+            from .compression import compressed_psum_tree
+            # NOTE: pjit handles intra-pod reduction; the explicit pod psum
+            # path is exercised via shard_map in train.py when enabled.
+            grads, new_residuals = compressed_psum_tree(
+                grads, state["residuals"], "pod")
+        params, opt, stats = adamw_update(opt_cfg, state["params"], grads,
+                                          state["opt"])
+        out = {"params": params, "opt": opt}
+        if new_residuals is not None:
+            out["residuals"] = new_residuals
+        elif "residuals" in state:
+            out["residuals"] = state["residuals"]
+        metrics = {"loss": loss, **stats}
+        return out, metrics
+
+    return train_step
+
+
+def make_serve_fns(cfg):
+    """(prefill_fn, decode_fn) for the arch family."""
+    model = get_model(cfg)
+
+    def prefill_fn(params, tokens, cache_len, **kw):
+        return model.prefill(params, tokens, cfg, cache_len=cache_len, **kw)
+
+    def decode_fn(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos, cfg)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,15 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run module, never
+# imported from tests, is the only place that forces 512 host devices).
+# A small device count is forced for the distributed-solver tests via a
+# subprocess (see test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

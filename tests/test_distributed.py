@@ -1,0 +1,50 @@
+"""Distributed SpTRSV (shard_map) — runs in a subprocess with 8 forced host
+devices so the main test process keeps its single-device view."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.core import AvgLevelCost, NoRewrite, transform
+    from repro.solver import schedule_for_csr, schedule_for_transformed, \\
+        solve_csr_seq
+    from repro.solver.distributed import solve_sharded
+    from repro.sparse import build_levels, generators
+
+    mesh = jax.make_mesh((8,), ("model",))
+    L = generators.random_lower(400, avg_offdiag=2.0, seed=3, max_back=24)
+    lv = build_levels(L)
+    b = np.random.default_rng(0).standard_normal(400)
+    x_ref = solve_csr_seq(L, b)
+    sched = schedule_for_csr(L, lv, chunk=32, max_deps=4, dtype=np.float32)
+    x = solve_sharded(sched, b, mesh, axis="model")
+    err0 = float(np.abs(x - x_ref).max())
+
+    # transformed system: fewer steps => fewer all_gathers
+    ts = transform(L, AvgLevelCost(), validate=False, codegen=False)
+    s1 = schedule_for_transformed(ts, chunk=32, max_deps=4)
+    c = ts.preamble(b).astype(np.float32)
+    x1 = solve_sharded(s1, c, mesh, axis="model")
+    err1 = float(np.abs(x1 - x_ref).max())
+    print(json.dumps({"err0": err0, "err1": err1,
+                      "steps0": sched.num_steps, "steps1": s1.num_steps}))
+""")
+
+
+def test_sharded_solver_subprocess():
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd=Path(__file__).parent.parent, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err0"] < 1e-3 and res["err1"] < 1e-3
+    assert res["steps1"] <= res["steps0"]

@@ -1,0 +1,66 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AvgLevelCost, transform
+from repro.kernels import ops
+from repro.solver import schedule_for_csr, schedule_for_transformed, \
+    solve_csr_seq
+from repro.sparse import build_levels, generators
+
+
+@pytest.mark.parametrize("n,avg,chunk,max_deps", [
+    (64, 1.5, 8, 2),
+    (200, 2.5, 32, 4),
+    (331, 3.0, 16, 8),       # non-multiple row count
+    (512, 2.0, 128, 4),
+])
+def test_sptrsv_kernel_shapes(n, avg, chunk, max_deps):
+    L = generators.random_lower(n, avg_offdiag=avg, seed=n, max_back=24)
+    lv = build_levels(L)
+    sched = schedule_for_csr(L, lv, chunk=chunk, max_deps=max_deps,
+                             dtype=np.float32)
+    b = np.random.default_rng(n).standard_normal(n)
+    x_ref = solve_csr_seq(L, b)
+    x_pal = ops.sptrsv_solve(sched, b, interpret=True)
+    x_oracle = ops.sptrsv_solve(sched, b, use_ref=True)
+    scale = np.maximum(1.0, np.abs(x_ref).max())
+    np.testing.assert_allclose(x_pal, x_oracle, rtol=1e-6, atol=1e-6)
+    assert np.abs(x_pal - x_ref).max() / scale < 5e-4
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_sptrsv_kernel_wide_rows(dtype):
+    L = generators.banded(96, 10, seed=2)       # forces row splitting
+    lv = build_levels(L)
+    sched = schedule_for_csr(L, lv, chunk=16, max_deps=4, dtype=dtype)
+    b = np.random.default_rng(0).standard_normal(96)
+    x_ref = solve_csr_seq(L, b)
+    x_pal = ops.sptrsv_solve(sched, b, interpret=True)
+    assert np.abs(x_pal - x_ref).max() < 1e-3
+
+
+def test_sptrsv_kernel_transformed():
+    L = generators.lung2_like(scale=0.05)
+    ts = transform(L, AvgLevelCost(), validate=True, codegen=False)
+    sched = schedule_for_transformed(ts, chunk=64, max_deps=8)
+    b = np.random.default_rng(1).standard_normal(L.n_rows)
+    c = ts.preamble(b)
+    x_ref = solve_csr_seq(L, b)
+    x_pal = ops.sptrsv_solve(sched, c.astype(np.float32), interpret=True)
+    scale = np.maximum(1.0, np.abs(x_ref).max())
+    assert np.abs(x_pal - x_ref).max() / scale < 5e-4
+
+
+@pytest.mark.parametrize("n,avg,block", [
+    (100, 2.0, 32), (500, 3.0, 128), (77, 1.0, 16),
+])
+def test_spmv_kernel(n, avg, block):
+    m = generators.random_lower(n, avg_offdiag=avg, seed=7)
+    x = np.random.default_rng(3).standard_normal(n)
+    y_ref = m.matvec(x)
+    y_pal = ops.spmv_ell(m, x, interpret=True, block_rows=block)
+    y_oracle = ops.spmv_ell(m, x, use_ref=True, block_rows=block)
+    np.testing.assert_allclose(y_pal, y_oracle, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,106 @@
+"""Level-set construction: vs networkx longest-path oracle + invariants."""
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import build_levels, generators, level_costs
+from repro.sparse.csr import CSR, from_coo
+
+
+def _nx_levels(L: CSR) -> np.ndarray:
+    g = nx.DiGraph()
+    g.add_nodes_from(range(L.n_rows))
+    rows = np.repeat(np.arange(L.n_rows), L.row_nnz())
+    for r, c in zip(rows, L.indices):
+        if c != r:
+            g.add_edge(int(c), int(r))
+    level = np.zeros(L.n_rows, dtype=np.int64)
+    for n in nx.topological_sort(g):
+        preds = list(g.predecessors(n))
+        if preds:
+            level[n] = 1 + max(level[p] for p in preds)
+    return level
+
+
+@pytest.mark.parametrize("gen,kw", [
+    (generators.chain, dict(n=50)),
+    (generators.banded, dict(n=80, bandwidth=3)),
+    (generators.random_lower, dict(n=200, avg_offdiag=2.5, seed=1)),
+    (generators.poisson2d_ic0, dict(nx=12, ny=9)),
+])
+def test_levels_match_networkx(gen, kw):
+    L = gen(**kw)
+    ours = build_levels(L).level_of
+    ref = _nx_levels(L)
+    np.testing.assert_array_equal(ours, ref)
+
+
+def test_chain_has_n_levels():
+    L = generators.chain(64)
+    assert build_levels(L).num_levels == 64
+
+
+def test_banded_level_structure():
+    L = generators.banded(30, 2)
+    lv = build_levels(L)
+    # bandwidth-2 band: level increments by 1 each row after warmup
+    assert lv.num_levels == 30
+
+
+@given(st.integers(2, 120), st.floats(0.5, 4.0), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_levels_valid_on_random(n, avg, seed):
+    L = generators.random_lower(n, avg_offdiag=avg, seed=seed)
+    lv = build_levels(L)
+    rows = np.repeat(np.arange(n), L.row_nnz())
+    strict = L.indices < rows
+    # every dependency sits at a strictly smaller level
+    assert (lv.level_of[L.indices[strict]] < lv.level_of[rows[strict]]).all()
+    # levels are contiguous 0..max
+    assert set(np.unique(lv.level_of)) == set(range(lv.num_levels))
+
+
+def test_level_costs_paper_formula():
+    L = generators.random_lower(100, avg_offdiag=2.0, seed=3)
+    lv = build_levels(L)
+    lc = level_costs(L, lv)
+    assert lc.sum() == 2 * L.nnz - L.n_rows
+
+
+def test_profile_generator_exact():
+    sizes = np.array([5, 3, 4, 2, 6])
+    m = generators.from_level_profile(
+        sizes, lambda rng, lvl, k: np.ones(k, np.int64),
+        lambda rng, lvl, k: np.ones(k, np.int64), seed=0)
+    lv = build_levels(m)
+    np.testing.assert_array_equal(lv.level_sizes(), sizes)
+
+
+def test_calibrated_analogues():
+    L = generators.lung2_like()
+    lv = build_levels(L)
+    sizes = lv.level_sizes()
+    assert L.n_rows == 109_460
+    assert lv.num_levels == 479
+    assert (sizes == 2).sum() == 453          # 94% two-row levels (paper)
+    T = generators.torso2_like(scale=0.25)
+    lvt = build_levels(T)
+    assert lvt.num_levels == 513
+
+
+def test_matrixmarket_roundtrip(tmp_path):
+    from repro.sparse import io as sio
+    m = generators.random_lower(40, avg_offdiag=2.0, seed=1)
+    p = tmp_path / "m.mtx"
+    sio.write_matrix_market(m, p)
+    m2 = sio.read_matrix_market(p)
+    np.testing.assert_array_equal(m.indptr, m2.indptr)
+    np.testing.assert_array_equal(m.indices, m2.indices)
+    np.testing.assert_allclose(m.data, m2.data)
+
+
+def test_load_named_falls_back_to_analogue():
+    from repro.sparse import io as sio
+    L = sio.load_named("lung2")
+    assert L.n_rows == 109_460

@@ -1,0 +1,57 @@
+"""End-to-end behaviour of the paper's system: matrix -> transform ->
+schedule -> solve (all engines) -> distributed barrier count, plus the
+benchmark drivers as smoke checks."""
+import numpy as np
+
+from repro.core import AvgLevelCost, ConstrainedAvgLevelCost, NoRewrite, \
+    transform
+from repro.kernels import ops
+from repro.solver import (schedule_for_csr, schedule_for_transformed, solve,
+                          solve_csr_seq)
+from repro.sparse import build_levels, generators
+
+
+def test_end_to_end_pipeline():
+    """The full paper pipeline on a lung2-like analogue."""
+    L = generators.lung2_like(scale=0.08)
+    levels = build_levels(L)
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    x_ref = solve_csr_seq(L, b)
+
+    # 1. transformation reduces barriers massively, keeps cost ~flat
+    ts = transform(L, AvgLevelCost(), validate=True, codegen=True)
+    m = ts.metrics
+    assert m.num_levels_after < 0.25 * m.num_levels_before
+    assert m.total_level_cost_after <= 1.02 * m.total_level_cost_before
+    assert m.code_bytes_after > 0
+
+    # 2. schedules shrink and still solve exactly
+    s0 = schedule_for_csr(L, levels, chunk=128, max_deps=4)
+    s1 = schedule_for_transformed(ts, chunk=128, max_deps=4)
+    assert s1.num_steps < s0.num_steps
+    c = ts.preamble(b).astype(np.float32)
+    for x in (solve(s0, b), solve(s1, c),
+              ops.sptrsv_solve(s1, c, interpret=True)):
+        scale = max(1.0, np.abs(x_ref).max())
+        assert np.abs(x - x_ref).max() / scale < 5e-4
+
+    # 3. the beyond-paper constrained strategy bounds the rewrite radius
+    ts2 = transform(L, ConstrainedAvgLevelCost(alpha=4, beta=8),
+                    validate=True, codegen=False)
+    assert ts2.metrics.max_rewrite_distance <= 8
+
+
+def test_benchmark_drivers_smoke(tmp_path, monkeypatch):
+    """Table-I + profile drivers run end to end on the analogues."""
+    import benchmarks.level_profiles as lp
+    import benchmarks.table1 as t1
+    from repro.sparse import io as sio
+
+    def reduced(name):
+        return (generators.lung2_like(scale=0.05) if name == "lung2"
+                else generators.torso2_like(scale=0.05))
+
+    monkeypatch.setattr(sio, "load_named", reduced)
+    rows = t1.run(csv_out=str(tmp_path / "t1.csv"))
+    assert len(rows) == 7  # header + 2 matrices x 3 strategies
+    assert lp.run(csv_dir=str(tmp_path))

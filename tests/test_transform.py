@@ -1,0 +1,150 @@
+"""Graph transformation: numerical equivalence (property-based), strategy
+invariants, Table-I metric behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AvgLevelCost, ConstrainedAvgLevelCost, GraphView,
+                        ManualEveryK, NoRewrite, transform)
+from repro.solver.reference import solve_csr_seq, solve_dense, \
+    solve_transformed_seq
+from repro.sparse import build_levels, generators
+
+
+STRATS = [NoRewrite(), AvgLevelCost(), ManualEveryK(5), ManualEveryK(10),
+          ConstrainedAvgLevelCost(alpha=6, beta=16, coef_cap=1e4)]
+
+
+@pytest.mark.parametrize("strategy", STRATS, ids=lambda s: s.name)
+@pytest.mark.parametrize("gen,kw", [
+    (generators.chain, dict(n=60)),
+    (generators.random_lower, dict(n=300, avg_offdiag=2.0, seed=7,
+                                   max_back=25)),
+    (generators.poisson2d_ic0, dict(nx=10, ny=10)),
+])
+def test_solution_preserved(strategy, gen, kw):
+    L = gen(**kw)
+    ts = transform(L, strategy, validate=True, codegen=False)
+    b = np.random.default_rng(5).standard_normal(L.n_rows)
+    x0 = solve_csr_seq(L, b)
+    x1 = solve_transformed_seq(ts, b)
+    np.testing.assert_allclose(x1, x0, rtol=1e-9, atol=1e-9)
+
+
+@given(st.integers(10, 150), st.floats(1.0, 3.5), st.integers(0, 10**6),
+       st.sampled_from(["avg", "manual", "constrained"]))
+@settings(max_examples=25, deadline=None)
+def test_equivalence_property(n, avg_deg, seed, sname):
+    """Any strategy on any random DAG preserves the solution (exact
+    rearranged substitution is pure algebra)."""
+    L = generators.random_lower(n, avg_offdiag=avg_deg, seed=seed,
+                                max_back=20)
+    strat = {"avg": AvgLevelCost(), "manual": ManualEveryK(4),
+             "constrained": ConstrainedAvgLevelCost()}[sname]
+    ts = transform(L, strat, validate=False, codegen=False)
+    rng = np.random.default_rng(seed ^ 0xABCDEF)
+    for _ in range(2):
+        b = rng.standard_normal(n)
+        x0 = solve_dense(L, b)
+        x1 = solve_transformed_seq(ts, b)
+        scale = np.maximum(1.0, np.abs(x0).max())
+        assert np.abs(x0 - x1).max() / scale < 1e-8
+
+
+@given(st.integers(30, 200), st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_avglevelcost_invariants(n, seed):
+    L = generators.random_lower(n, avg_offdiag=1.5, seed=seed, max_back=8)
+    view = GraphView(L)
+    ts = transform(L, AvgLevelCost(), validate=False, codegen=False)
+    m = ts.metrics
+    # never increases level count; recomputed never exceeds assigned
+    assert m.num_levels_after <= m.num_levels_before
+    assert m.num_levels_recomputed <= m.num_levels_after
+    # avgLevelCost is a hard cap for levels that were targets: every level's
+    # cost after <= max(avg, original fat-level cost)
+    lc_after = np.zeros(m.num_levels_after, dtype=np.int64)
+    deps = ts.A.row_nnz()
+    np.add.at(lc_after, ts.level_of_assigned, 2 * deps + 1)
+    fat_max = view.level_cost.max()
+    assert lc_after.max() <= max(np.ceil(view.avg_level_cost), fat_max)
+
+
+def test_empty_levels_deleted():
+    L = generators.chain(40)
+    ts = transform(L, ManualEveryK(4), validate=True, codegen=False)
+    used = np.unique(ts.level_of_assigned)
+    np.testing.assert_array_equal(used, np.arange(used.size))
+
+
+def test_rewrite_distance_and_skips_constrained():
+    L = generators.chain(100)
+    ts = transform(L, ConstrainedAvgLevelCost(alpha=2, beta=5, coef_cap=1e3),
+                   validate=True, codegen=False)
+    assert ts.metrics.max_rewrite_distance <= 5
+
+
+def test_manual_grouping_respects_runs():
+    """Manual strategy must not group thin levels across fat gaps."""
+    import numpy as np
+    sizes = np.array([50] + [2] * 12 + [50] + [2] * 12)
+    L = generators.from_level_profile(
+        sizes, lambda rng, lvl, k: np.ones(k, np.int64),
+        lambda rng, lvl, k: np.ones(k, np.int64), seed=1)
+    ts = transform(L, ManualEveryK(10), validate=True, codegen=False)
+    assert ts.metrics.max_rewrite_distance <= 9
+
+
+def test_metrics_total_cost_flat_for_chains():
+    """Chain rewrites keep in-degree <= 1: total paper cost must not grow
+    (lung2 behaviour in Table I)."""
+    L = generators.lung2_like(scale=0.2)
+    ts = transform(L, AvgLevelCost(), validate=False, codegen=False)
+    m = ts.metrics
+    assert m.total_level_cost_after <= m.total_level_cost_before * 1.01
+    assert m.num_levels_after < m.num_levels_before * 0.3
+
+
+def test_codegen_bytes_and_source():
+    from repro.core import generate_c_source
+    L = generators.random_lower(50, avg_offdiag=2.0, seed=2)
+    ts = transform(L, AvgLevelCost(), validate=True, codegen=True)
+    assert ts.metrics.code_bytes_after > 0
+    lv = ts.levelsets(assigned=True)
+    src = generate_c_source(ts.A, None, ts.diag, ts.level_of_assigned,
+                            max_rows=20)
+    assert "void calculate0" in src and "x[" in src
+
+
+def test_preamble_identity_for_norewrite():
+    L = generators.random_lower(80, avg_offdiag=2.0, seed=9)
+    ts = transform(L, NoRewrite(), validate=True, codegen=False)
+    assert ts.identity_preamble
+    b = np.random.default_rng(0).standard_normal(80)
+    np.testing.assert_allclose(ts.preamble(b), b)
+
+
+def test_materialize_b_matches_tfactor():
+    L = generators.random_lower(120, avg_offdiag=2.0, seed=11, max_back=15)
+    ts = transform(L, AvgLevelCost(), validate=True, codegen=False,
+                   materialize_b=True)
+    b = np.random.default_rng(1).standard_normal(120)
+    c_t = ts.preamble(b)
+    c_b = ts.B.matvec(b)
+    np.testing.assert_allclose(c_b, c_t, rtol=1e-10, atol=1e-12)
+
+
+def test_critical_path_strategy():
+    """Beyond-paper critical-path strategy shrinks DAG depth with minimal
+    rewrites and preserves the solution."""
+    from repro.core import transform
+    from repro.core.strategies import CriticalPathRewrite
+    L = generators.chain(64)
+    ts = transform(L, CriticalPathRewrite(beta=8), validate=True,
+                   codegen=False)
+    m = ts.metrics
+    assert m.num_levels_after <= (m.num_levels_before + 7) // 8 + 1
+    L2 = generators.random_lower(200, avg_offdiag=2.0, seed=5, max_back=12)
+    ts2 = transform(L2, CriticalPathRewrite(beta=4, alpha=16),
+                    validate=True, codegen=False)
+    assert ts2.metrics.num_levels_after <= ts2.metrics.num_levels_before
