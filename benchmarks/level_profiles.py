@@ -11,24 +11,33 @@ from repro.sparse import io as sio
 
 
 def profile(name: str, max_rows: int | None = None):
+    from repro.solver import schedule_for_transformed
     L = sio.load_named(name)
     out = {}
+    sched_stats = {}
     for strat in (NoRewrite(), AvgLevelCost(), ManualEveryK(10)):
         ts = transform(L, strat, validate=False, codegen=False)
         deps = ts.A.row_nnz()
         lc = np.zeros(ts.metrics.num_levels_after, dtype=np.int64)
         np.add.at(lc, ts.level_of_assigned, 2 * deps + 1)
-        out[ts.metrics.strategy.split("(")[0]] = lc
-    return out
+        key = ts.metrics.strategy.split("(")[0]
+        out[key] = lc
+        s = schedule_for_transformed(ts, chunk=256, max_deps=16)
+        sched_stats[key] = (s.num_steps, s.padded_flops(), s.flops(),
+                            s.build_ms)
+    return out, sched_stats
 
 
 def run(csv_dir=None):
     for name in ("lung2", "torso2"):
-        prof = profile(name)
+        prof, sched = profile(name)
         print(f"# {name}: num_levels -> " + ", ".join(
             f"{k}:{len(v)}" for k, v in prof.items()))
         print(f"# {name}: avg_cost  -> " + ", ".join(
             f"{k}:{v.mean():.1f}" for k, v in prof.items()))
+        print(f"# {name}: schedule (steps,padded,real,build_ms) -> " +
+              ", ".join(f"{k}:{s[0]}/{s[1]}/{s[2]}/{s[3]:.1f}"
+                        for k, s in sched.items()))
         if csv_dir:
             from pathlib import Path
             for k, v in prof.items():

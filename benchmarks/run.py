@@ -1,19 +1,78 @@
 """Benchmark aggregator — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run            # full run
+    PYTHONPATH=src python -m benchmarks.run --smoke    # reduced-scale CI run
 
 Sections:
   table1          — paper Table I (strategy comparison, lung2/torso2)
   level_profiles  — paper Fig. 5/6 (per-level cost profiles)
   solver_bench    — solve wall time (CPU measured + TPU roofline model)
+  schedule        — schedule-compiler before/after (BENCH_schedule.json)
+
+--smoke runs every section at reduced scale (seconds, not minutes) so the
+tier-1 suite can import-check and execute the drivers (pytest -m bench).
+Both modes write experiments/BENCH_schedule.json: build ms (legacy loop vs
+vectorized), steps, padded vs real FLOPs, and us_per_solve before/after —
+the perf trajectory of the schedule compiler.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
+from pathlib import Path
+
+
+def bench_schedule(out_path="experiments/BENCH_schedule.json",
+                   scales=(0.25, 0.15), reps=5, time_solve=True) -> dict:
+    """Schedule-compiler before/after on the benchmark analogues."""
+    from benchmarks.solver_bench import schedule_metrics
+    from repro.sparse import generators
+    record = {
+        "config": {"chunk": 256, "max_deps": 16, "scales": list(scales)},
+        "matrices": {},
+    }
+    for name, L in (
+            (f"lung2_like@{scales[0]}", generators.lung2_like(scales[0])),
+            (f"torso2_like@{scales[1]}", generators.torso2_like(scales[1]))):
+        record["matrices"][name] = schedule_metrics(
+            L, chunk=256, max_deps=16, reps=reps, time_solve=time_solve)
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
+def smoke(out_path="experiments/BENCH_schedule.json") -> dict:
+    """Reduced-scale pass over every benchmark driver (tier-1 smoke)."""
+    import benchmarks.level_profiles as lp
+    import benchmarks.solver_bench as sb
+    import benchmarks.table1 as t1
+    from repro.sparse import generators
+    from repro.sparse import io as sio
+
+    real_load = sio.load_named
+    try:
+        sio.load_named = lambda name: (
+            generators.lung2_like(scale=0.04) if name == "lung2"
+            else generators.torso2_like(scale=0.04))
+        t1.run(csv_out=None)
+        lp.run(csv_dir=None)
+        sb.run(csv_out=None, scales=(0.05, 0.05), iters=2)
+    finally:
+        sio.load_named = real_load
+    return bench_schedule(out_path, scales=(0.08, 0.06), reps=2,
+                          time_solve=False)
 
 
 def main() -> None:
+    if "--smoke" in sys.argv:
+        t0 = time.time()
+        rec = smoke()
+        print(json.dumps(rec, indent=2))
+        print(f"\nsmoke total {time.time() - t0:.1f}s")
+        return
     from benchmarks import level_profiles, solver_bench, table1
     t0 = time.time()
     print("== Table I: strategy comparison (paper values inline) ==")
@@ -21,16 +80,25 @@ def main() -> None:
     print("\n== Fig 5/6: level-cost profiles ==")
     level_profiles.run(csv_dir="experiments")
     print("\n== Solver wall-time (name,strategy,steps,levels,us,model_us,"
-          "speedup) ==")
+          "speedup,build_ms,padded,real) ==")
     solver_bench.run(csv_out="experiments/solver_bench.csv")
+    print("\n== Schedule compiler before/after ==")
+    rec = bench_schedule()
+    for name, m in rec["matrices"].items():
+        print(f"{name}: legacy_build={m['legacy_build_ms']}ms -> "
+              f"after={m['after']['build_ms']}ms "
+              f"({m['build_speedup_vs_legacy']}x), steps "
+              f"{m['before']['steps']} -> {m['after']['steps']} "
+              f"(levels {m['after']['levels']}), padded_flops "
+              f"{m['before']['padded_flops']} -> "
+              f"{m['after']['padded_flops']} "
+              f"(-{m['padded_flops_reduction']:.0%})")
     _roofline_summary()
     print(f"\ntotal {time.time() - t0:.1f}s")
 
 
 def _roofline_summary() -> None:
     """Summarize the latest dry-run roofline records, if present."""
-    import json
-    from pathlib import Path
     src = Path("experiments/dryrun_results.json")
     if not src.exists():
         print("\n(no dry-run records; run repro.launch.dryrun --all "

@@ -1,12 +1,19 @@
-"""Solver wall-time benchmark (the runtime table the paper omits).
+"""Solver wall-time + schedule-compiler benchmark.
 
-Measures the JAX level-scheduled solver (CPU wall time, jitted, warm) for
-no-rewriting vs avgLevelCost vs constrained strategies, plus a TPU roofline
-model: per-step cost = max(bytes/HBM_BW, flops/VPU) + step latency; the
-transformation's win is mostly the removed per-step/per-level overhead and
-barrier latency.
+Measures, per matrix and strategy:
+  * the JAX level-scheduled solver (CPU wall time, jitted, warm),
+  * schedule-compiler quality: steps vs levels, padded vs real FLOPs,
+    schedule memory, and build time — for the legacy-shaped configuration
+    (level-aligned, one global max_deps-wide bucket, per-lane Python build)
+    vs the current compiler (vectorized build, dependency-aware compaction,
+    width-bucketed tiles),
+  * a TPU roofline model: per-step cost = max(bytes/HBM_BW, flops/VPU) +
+    step latency; the transformation's win is mostly the removed
+    per-step/per-level overhead and barrier latency.
 
 CSV: matrix,strategy,steps,levels,us_per_solve,model_tpu_us,speedup.
+The schedule-compiler before/after numbers go to BENCH_schedule.json via
+benchmarks.run.
 """
 from __future__ import annotations
 
@@ -16,11 +23,12 @@ import numpy as np
 
 from repro.core import AvgLevelCost, ConstrainedAvgLevelCost, NoRewrite, \
     transform
-from repro.solver import schedule_for_csr, schedule_for_transformed, solve, \
-    to_device
+from repro.solver import build_schedule, schedule_for_csr, \
+    schedule_for_transformed, solve, to_device
 from repro.solver.levelset import solve_scan
 from repro.sparse import build_levels, generators
 from repro.sparse import io as sio
+from repro.sparse.csr import tril
 
 HBM_BW = 819e9
 VPU_FLOPS = 4e12          # ~VPU f32 throughput per chip
@@ -34,11 +42,128 @@ def tpu_model_us(sched) -> float:
     return (sched.num_steps * (per_step + STEP_LATENCY)) * 1e6
 
 
-def bench_one(L, name: str, scale_note: str, chunk=256, max_deps=8,
+def legacy_build_ms(A, diag, level_of, chunk=256, max_deps=16,
+                    dtype=np.float32) -> float:
+    """Time the seed's per-row/per-lane Python packing loop (the baseline
+    the vectorized compiler replaces).  Faithful to the original cost
+    profile: per-lane list appends + per-lane ELL tile fills."""
+    t0 = time.perf_counter()
+    n = A.n_rows
+    num_levels = int(level_of.max()) + 1 if n else 0
+    order = np.lexsort((np.arange(n), level_of))
+    indptr, indices, data = A.indptr, A.indices, A.data
+    lane_rows, lane_deps, lane_final = [], [], []
+    lanes_per_level = []
+    pos = 0
+    for lvl in range(num_levels):
+        start = len(lane_rows)
+        while pos < n and level_of[order[pos]] == lvl:
+            i = int(order[pos]); pos += 1
+            lo, hi = int(indptr[i]), int(indptr[i + 1])
+            nseg = max(1, -(-(hi - lo) // max_deps))
+            for s in range(nseg):
+                lane_rows.append(i)
+                lane_deps.append((lo + s * max_deps,
+                                  min(lo + (s + 1) * max_deps, hi)))
+                lane_final.append(s == nseg - 1)
+        lanes_per_level.append(len(lane_rows) - start)
+    steps = []
+    lane_ptr = 0
+    for lvl in range(num_levels):
+        cnt = lanes_per_level[lvl]
+        lanes = list(range(lane_ptr, lane_ptr + cnt))
+        lane_ptr += cnt
+        by_row_seen, buckets = {}, []
+        for ln in lanes:
+            k = by_row_seen.get(lane_rows[ln], 0)
+            by_row_seen[lane_rows[ln]] = k + 1
+            while len(buckets) <= k:
+                buckets.append([])
+            buckets[k].append(ln)
+        for bucket in buckets:
+            for s in range(0, len(bucket), chunk):
+                steps.append(bucket[s:s + chunk])
+        if not buckets:
+            steps.append([])
+    S, C, D = len(steps), chunk, max_deps
+    dep_idx = np.full((S, C, D), n, dtype=np.int32)
+    dep_coef = np.zeros((S, C, D), dtype=dtype)
+    row_ids = np.full((S, C), n, dtype=np.int32)
+    dinv = np.zeros((S, C), dtype=dtype)
+    for si, lanes in enumerate(steps):
+        for lane_pos, ln in enumerate(lanes):
+            lo, hi = lane_deps[ln]
+            k = hi - lo
+            dep_idx[si, lane_pos, :k] = indices[lo:hi]
+            dep_coef[si, lane_pos, :k] = data[lo:hi]
+            if lane_final[ln]:
+                row_ids[si, lane_pos] = lane_rows[ln]
+                dinv[si, lane_pos] = 1.0 / diag[lane_rows[ln]]
+    return (time.perf_counter() - t0) * 1e3
+
+
+def _solve_us(sched, b, iters=3) -> float:
+    import jax
+    import jax.numpy as jnp
+    ds = to_device(sched)
+    fn = jax.jit(lambda cc: solve_scan(ds, cc))
+    cc = jnp.asarray(b, dtype=ds.dtype)
+    fn(cc).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(cc).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def schedule_metrics(L, chunk=256, max_deps=16, reps=5,
+                     time_solve=True) -> dict:
+    """Before/after schedule-compiler comparison on one matrix: legacy
+    per-lane build vs vectorized build, level-aligned single-bucket layout
+    vs compacted width-bucketed layout."""
+    lv = build_levels(L)
+    A = tril(L, keep_diagonal=False)
+    diag = L.diagonal_fast()
+    legacy_ms = min(legacy_build_ms(A, diag, lv.level_of, chunk, max_deps)
+                    for _ in range(max(1, reps // 2)))
+    before = after = None
+    before_ms, after_ms = [], []
+    for _ in range(reps):
+        before = build_schedule(A, diag, lv.level_of, chunk=chunk,
+                                max_deps=max_deps, legacy_shape=True)
+        before_ms.append(before.build_ms)
+        after = schedule_for_csr(L, lv, chunk=chunk, max_deps=max_deps,
+                                 compact=True)
+        after_ms.append(after.build_ms)
+
+    def row(s, build):
+        return dict(build_ms=round(build, 3), steps=s.num_steps,
+                    levels=s.num_levels, padded_flops=s.padded_flops(),
+                    real_flops=s.flops(), memory_bytes=s.memory_bytes(),
+                    group_widths=list(s.group_widths),
+                    model_tpu_us=round(tpu_model_us(s), 1))
+
+    out = dict(
+        n=L.n_rows, nnz=L.nnz, chunk=chunk, max_deps=max_deps,
+        legacy_build_ms=round(legacy_ms, 2),
+        before=row(before, min(before_ms)),
+        after=row(after, min(after_ms)),
+    )
+    if time_solve:
+        b = np.random.default_rng(0).standard_normal(L.n_rows)
+        out["before"]["us_per_solve"] = round(_solve_us(before, b), 1)
+        out["after"]["us_per_solve"] = round(_solve_us(after, b), 1)
+    out["build_speedup_vs_legacy"] = round(
+        legacy_ms / max(min(after_ms), 1e-9), 1)
+    out["padded_flops_reduction"] = round(
+        1 - after.padded_flops() / before.padded_flops(), 3)
+    out["steps_reduction"] = before.num_steps - after.num_steps
+    return out
+
+
+def bench_one(L, name: str, scale_note: str, chunk=256, max_deps=16,
               iters=5):
     import jax
     import jax.numpy as jnp
-    lv = build_levels(L)
     b = np.random.default_rng(0).standard_normal(L.n_rows)
     rows = []
     base_us = None
@@ -59,20 +184,24 @@ def bench_one(L, name: str, scale_note: str, chunk=256, max_deps=8,
             base_us = us
         rows.append(f"{name}{scale_note},{ts.metrics.strategy.split('(')[0]},"
                     f"{sched.num_steps},{sched.num_levels},{us:.0f},"
-                    f"{tpu_model_us(sched):.0f},{base_us / us:.2f}")
+                    f"{tpu_model_us(sched):.0f},{base_us / us:.2f},"
+                    f"{sched.build_ms:.2f},{sched.padded_flops()},"
+                    f"{sched.flops()}")
     return rows
 
 
-def run(csv_out=None):
+def run(csv_out=None, scales=(0.25, 0.15), iters=5):
     header = ("matrix,strategy,steps,levels,us_per_solve,model_tpu_us,"
-              "speedup_vs_norewrite")
+              "speedup_vs_norewrite,build_ms,padded_flops,real_flops")
     rows = [header]
     rng_mats = [
-        (generators.lung2_like(scale=0.25), "lung2_like", "@0.25"),
-        (generators.torso2_like(scale=0.15), "torso2_like", "@0.15"),
+        (generators.lung2_like(scale=scales[0]), "lung2_like",
+         f"@{scales[0]}"),
+        (generators.torso2_like(scale=scales[1]), "torso2_like",
+         f"@{scales[1]}"),
     ]
     for L, name, note in rng_mats:
-        rows.extend(bench_one(L, name, note))
+        rows.extend(bench_one(L, name, note, iters=iters))
     out = "\n".join(rows)
     print(out)
     if csv_out:

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..solver.schedule import LevelSchedule
-from .sptrsv_level import sptrsv_levels_pallas
+from ..solver.levelset import to_device
+from .sptrsv_level import sptrsv_groups_pallas
 from .spmv_ell import spmv_ell_pallas
 from . import ref
 
@@ -29,23 +30,23 @@ def sptrsv_solve(sched: LevelSchedule, c: np.ndarray,
                  use_ref: bool = False) -> np.ndarray:
     """Solve a LevelSchedule with the Pallas kernel (or the jnp oracle)."""
     interpret = default_interpret() if interpret is None else interpret
-    dtype = sched.dep_coef.dtype
+    dtype = sched.dtype
     c_pad = jnp.concatenate([jnp.asarray(c, dtype=dtype),
                              jnp.zeros((1,), dtype)])
-    args = (jnp.asarray(sched.row_ids), jnp.asarray(sched.dep_idx),
-            jnp.asarray(sched.dep_coef), jnp.asarray(sched.dinv),
-            jnp.asarray(sched.carry_in), jnp.asarray(sched.carry_out),
-            jnp.asarray(sched.c_ids), c_pad)
+    # the engines' DeviceSchedule staging is the single source of truth for
+    # group leaf order (GROUP_LEAVES + carry leaves when present)
+    groups = to_device(sched).groups
     if use_ref:
-        out = ref.sptrsv_levels_ref(*args, n=sched.n, n_carry=sched.n_carry)
+        out = ref.sptrsv_levels_grouped_ref(groups, c_pad, n=sched.n,
+                                            n_carry=sched.n_carry)
     else:
-        out = sptrsv_levels_pallas(*args, n=sched.n, n_carry=sched.n_carry,
-                                   interpret=interpret)
+        out = sptrsv_groups_pallas(groups, c_pad, n=sched.n,
+                                   n_carry=sched.n_carry, interpret=interpret)
     return np.asarray(out)
 
 
 def ell_pack_csr(m, block_rows: int = 512, dtype=np.float32):
-    """Pack a CSR matrix into ELL arrays for spmv_ell.
+    """Pack a CSR matrix into ELL arrays for spmv_ell (vectorized scatter).
 
     Returns (ell_idx (n_pad, D), ell_coef (n_pad, D), n).  Padding indices
     point at x_pad's final zero slot.
@@ -56,11 +57,11 @@ def ell_pack_csr(m, block_rows: int = 512, dtype=np.float32):
     n_pad = -(-n // block_rows) * block_rows
     ell_idx = np.full((n_pad, D), m.n_cols, dtype=np.int32)
     ell_coef = np.zeros((n_pad, D), dtype=dtype)
-    for i in range(n):
-        lo, hi = m.indptr[i], m.indptr[i + 1]
-        k = hi - lo
-        ell_idx[i, :k] = m.indices[lo:hi]
-        ell_coef[i, :k] = m.data[lo:hi]
+    indptr = np.asarray(m.indptr, dtype=np.int64)
+    flat = np.repeat(np.arange(n, dtype=np.int64) * D, deg) + \
+        (np.arange(indptr[-1]) - np.repeat(indptr[:-1], deg))
+    ell_idx.reshape(-1)[flat] = m.indices
+    ell_coef.reshape(-1)[flat] = m.data
     return ell_idx, ell_coef, n
 
 

@@ -4,32 +4,45 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sptrsv_levels_ref", "spmv_ell_ref"]
+__all__ = ["sptrsv_levels_ref", "sptrsv_levels_grouped_ref", "spmv_ell_ref"]
 
 
-def sptrsv_levels_ref(row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out,
-                      c_ids, c_pad, n: int, n_carry: int) -> jax.Array:
-    """Reference for the level-scheduled SpTRSV kernel.
+def sptrsv_levels_grouped_ref(groups, c_pad, n: int, n_carry: int) -> jax.Array:
+    """Reference for the width-bucketed level-scheduled SpTRSV kernel.
 
-    Shapes: row_ids (S,C) i32; dep_idx (S,C,D) i32; dep_coef (S,C,D) f;
-    dinv (S,C) f; carry_in/out (S,C) i32; c_ids (S,C) i32; c_pad (n+1,) f.
-    Returns x (n,).
+    `groups` is a tuple of per-group leaf tuples: (row_ids (S, C_g),
+    dep_idx (S, C_g, D_g), dep_coef, dinv[, carry_in, carry_out]); groups
+    without carry maps hold no partial-row lanes.  c_pad has n+1 entries
+    (last = 0).  Returns x (n,).
     """
+    S = groups[0][0].shape[0]
     x = jnp.zeros((n + 1,), dtype=c_pad.dtype)
     carry = jnp.zeros((n_carry + 2,), dtype=c_pad.dtype)
 
     def body(state, s):
         x, carry = state
-        gathered = x[dep_idx[s]]
-        partial = jnp.sum(dep_coef[s] * gathered, axis=-1)
-        tot = partial + carry[carry_in[s]]
-        xi = (c_pad[c_ids[s]] - tot) * dinv[s]
-        x = x.at[row_ids[s]].set(xi)
-        carry = carry.at[carry_out[s]].set(tot)
+        for g in groups:
+            row_ids = g[0][s]
+            partial = jnp.sum(g[2][s] * x[g[1][s]], axis=-1)
+            if len(g) == 6:
+                tot = partial + carry[g[4][s]]
+                carry = carry.at[g[5][s]].set(tot)
+            else:
+                tot = partial
+            x = x.at[row_ids].set((c_pad[row_ids] - tot) * g[3][s])
         return (x, carry), None
 
-    (x, _), _ = jax.lax.scan(body, (x, carry), jnp.arange(row_ids.shape[0]))
+    (x, _), _ = jax.lax.scan(body, (x, carry), jnp.arange(S))
     return x[:n]
+
+
+def sptrsv_levels_ref(row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out,
+                      c_ids, c_pad, n: int, n_carry: int) -> jax.Array:
+    """Single-group compatibility oracle (legacy flat signature; c_ids is
+    accepted and ignored — row_ids doubles as the c gather index)."""
+    del c_ids
+    group = (row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out)
+    return sptrsv_levels_grouped_ref((group,), c_pad, n=n, n_carry=n_carry)
 
 
 def spmv_ell_ref(ell_idx, ell_coef, x_pad) -> jax.Array:

@@ -1,26 +1,32 @@
-"""Pallas TPU kernel: level-scheduled SpTRSV over a static ELL schedule.
+"""Pallas TPU kernel: level-scheduled SpTRSV over a width-bucketed schedule.
 
-TPU-native design (DESIGN.md §3):
+TPU-native design:
   * one grid step per schedule step — the TPU grid executes sequentially, so
     cross-step dependencies are carried in VMEM scratch (x, carry);
   * x and carry live in VMEM for the whole solve (n <= ~1.5M fp32);
-  * each step streams its (C, D) ELL tile HBM->VMEM through BlockSpecs: rows
-    padded to sublane multiples (C = 8k), deps padded to lanes (D | 128 for
-    full tiles; smaller D still vectorizes on the 8x128 VPU);
+  * each step streams one (C_g, D_g) ELL tile per width group HBM->VMEM
+    through its own BlockSpec: rows padded to sublane multiples (C_g = 8k),
+    deps bucketed to the schedule's width classes (D in {4, 8, 16, 32} by
+    default) so thin rows don't pay a global max_deps pad;
+  * width groups of one step execute back to back — the schedule compiler
+    guarantees no lane reads a row or carry finalized in the same step, so
+    intra-step ordering is free;
+  * groups without partial-row lanes ship no carry maps and skip the carry
+    gather/scatter entirely (the common case after bucketing);
   * the kernel is VPU/memory-bound (gather + FMA + scatter) — no MXU use;
     the roofline term that matters is HBM bytes = schedule bytes, and the
     sequential-step count is what the paper's transformation minimizes.
 
-Kernel body per step:
-    partial = sum(dep_coef * x[dep_idx], axis=-1)      # (C,)
-    tot     = partial + carry[carry_in]
-    xi      = (c[c_ids] - tot) * dinv
-    x[row_ids]    = xi    (final lanes; padding lanes hit garbage slot)
-    carry[carry_out] = tot
+Kernel body per step, per width group:
+    partial = sum(dep_coef * x[dep_idx], axis=-1)      # (C_g,)
+    tot     = partial + carry[carry_in]                # if group has carries
+    xi      = (c[row_ids] - tot) * dinv
+    x[row_ids]       = xi   (padding/partial lanes hit the garbage slot)
+    carry[carry_out] = tot  (if group has carries)
 
-Validated in interpret mode on CPU against ref.sptrsv_levels_ref; real-TPU
-deployment notes: dynamic gather/scatter over a VMEM-resident vector lowers
-to Mosaic gather ops; D is kept <= 32 so a (C, D) tile is at most
+Validated in interpret mode on CPU against ref.sptrsv_levels_grouped_ref;
+real-TPU deployment notes: dynamic gather/scatter over a VMEM-resident
+vector lowers to Mosaic gather ops; bucketed D keeps a (C, D) tile at most
 8k x 32 x 4B = 1 MiB of VMEM traffic per step.
 """
 from __future__ import annotations
@@ -33,72 +39,96 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sptrsv_levels_pallas"]
-
-
-def _kernel(row_ids_ref, dep_idx_ref, dep_coef_ref, dinv_ref, carry_in_ref,
-            carry_out_ref, c_ids_ref, c_pad_ref, out_ref, x_ref, carry_ref):
-    s = pl.program_id(0)
-
-    @pl.when(s == 0)
-    def _init():
-        x_ref[...] = jnp.zeros_like(x_ref)
-        carry_ref[...] = jnp.zeros_like(carry_ref)
-
-    idx = dep_idx_ref[0]                     # (C, D) int32
-    coef = dep_coef_ref[0]                   # (C, D)
-    x = x_ref[...]
-    gathered = jnp.take(x, idx, axis=0)      # (C, D) VMEM gather
-    partial = jnp.sum(coef * gathered, axis=-1)              # (C,)
-    carry = carry_ref[...]
-    tot = partial + jnp.take(carry, carry_in_ref[0], axis=0)
-    c_here = jnp.take(c_pad_ref[...], c_ids_ref[0], axis=0)
-    xi = (c_here - tot) * dinv_ref[0]
-    x_ref[...] = x.at[row_ids_ref[0]].set(xi)
-    carry_ref[...] = carry.at[carry_out_ref[0]].set(tot)
-
-    @pl.when(s == pl.num_programs(0) - 1)
-    def _done():
-        out_ref[...] = x_ref[...]
+__all__ = ["sptrsv_levels_pallas", "sptrsv_groups_pallas"]
 
 
 def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
 
 
-@functools.partial(jax.jit, static_argnames=("n", "n_carry", "interpret"))
-def sptrsv_levels_pallas(row_ids, dep_idx, dep_coef, dinv, carry_in,
-                         carry_out, c_ids, c_pad, *, n: int, n_carry: int,
-                         interpret: bool = True) -> jax.Array:
-    """Solve the level schedule; returns x (n,).
+def _make_kernel(group_sizes: tuple):
+    """Kernel over a flat ref list: per group either 4 refs (row_ids,
+    dep_idx, dep_coef, dinv) or 6 (+ carry_in, carry_out), then c_pad,
+    out, and the x/carry VMEM scratch."""
 
-    Argument shapes match ref.sptrsv_levels_ref.  c_pad has n+1 entries
-    (last = 0 garbage slot).
+    def kernel(*refs):
+        pos = 0
+        group_refs = []
+        for sz in group_sizes:
+            group_refs.append(refs[pos:pos + sz])
+            pos += sz
+        c_pad_ref, out_ref, x_ref, carry_ref = refs[pos:pos + 4]
+        s = pl.program_id(0)
+
+        @pl.when(s == 0)
+        def _init():
+            x_ref[...] = jnp.zeros_like(x_ref)
+            carry_ref[...] = jnp.zeros_like(carry_ref)
+
+        for g in group_refs:
+            row_ids = g[0][0]                    # (C,)
+            idx = g[1][0]                        # (C, D)
+            coef = g[2][0]
+            dinv = g[3][0]
+            x = x_ref[...]
+            gathered = jnp.take(x, idx, axis=0)
+            partial = jnp.sum(coef * gathered, axis=-1)          # (C,)
+            if len(g) == 6:
+                carry = carry_ref[...]
+                tot = partial + jnp.take(carry, g[4][0], axis=0)
+                carry_ref[...] = carry.at[g[5][0]].set(tot)
+            else:
+                tot = partial
+            c_here = jnp.take(c_pad_ref[...], row_ids, axis=0)
+            x_ref[...] = x.at[row_ids].set((c_here - tot) * dinv)
+
+        @pl.when(s == pl.num_programs(0) - 1)
+        def _done():
+            out_ref[...] = x_ref[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n", "n_carry", "interpret"))
+def sptrsv_groups_pallas(groups, c_pad, *, n: int, n_carry: int,
+                         interpret: bool = True) -> jax.Array:
+    """Solve a width-bucketed schedule; returns x (n,).
+
+    `groups` is a tuple of per-group leaf tuples — (row_ids (S, C_g),
+    dep_idx (S, C_g, D_g), dep_coef, dinv) plus (carry_in, carry_out) for
+    groups holding partial-row lanes.  c_pad has n+1 entries (last = 0).
     """
-    S, C = row_ids.shape
-    D = dep_idx.shape[2]
-    dtype = dep_coef.dtype
+    S = groups[0][0].shape[0]
+    dtype = groups[0][2].dtype
     n_pad = _round_up(n + 1, 128)
     nc_pad = _round_up(n_carry + 2, 128)
     c_full = jnp.zeros((n_pad,), dtype).at[: n + 1].set(c_pad.astype(dtype))
 
     step2 = lambda s: (s, 0)        # (S, C) blocks
     step3 = lambda s: (s, 0, 0)     # (S, C, D) blocks
-    whole = lambda s: (0,)          # resident vectors
+    whole = lambda s: (0,)          # VMEM-resident vectors
+
+    in_specs = []
+    args = []
+    group_sizes = []
+    for g in groups:
+        C = g[0].shape[1]
+        D = g[1].shape[2]
+        in_specs += [pl.BlockSpec((1, C), step2),       # row_ids
+                     pl.BlockSpec((1, C, D), step3),    # dep_idx
+                     pl.BlockSpec((1, C, D), step3),    # dep_coef
+                     pl.BlockSpec((1, C), step2)]       # dinv
+        args += [g[0], g[1], g[2].astype(dtype), g[3].astype(dtype)]
+        if len(g) == 6:
+            in_specs += [pl.BlockSpec((1, C), step2)] * 2
+            args += [g[4], g[5]]
+        group_sizes.append(len(g))
+    in_specs.append(pl.BlockSpec((n_pad,), whole))      # c_pad
 
     out = pl.pallas_call(
-        _kernel,
+        _make_kernel(tuple(group_sizes)),
         grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, C), step2),       # row_ids
-            pl.BlockSpec((1, C, D), step3),    # dep_idx
-            pl.BlockSpec((1, C, D), step3),    # dep_coef
-            pl.BlockSpec((1, C), step2),       # dinv
-            pl.BlockSpec((1, C), step2),       # carry_in
-            pl.BlockSpec((1, C), step2),       # carry_out
-            pl.BlockSpec((1, C), step2),       # c_ids
-            pl.BlockSpec((n_pad,), whole),     # c_pad (VMEM resident)
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((n_pad,), whole),
         out_shape=jax.ShapeDtypeStruct((n_pad,), dtype),
         scratch_shapes=[
@@ -106,6 +136,16 @@ def sptrsv_levels_pallas(row_ids, dep_idx, dep_coef, dinv, carry_in,
             pltpu.VMEM((nc_pad,), dtype),    # partial-row carry slots
         ],
         interpret=interpret,
-    )(row_ids, dep_idx, dep_coef.astype(dtype), dinv.astype(dtype),
-      carry_in, carry_out, c_ids, c_full)
+    )(*args, c_full)
     return out[:n]
+
+
+def sptrsv_levels_pallas(row_ids, dep_idx, dep_coef, dinv, carry_in,
+                         carry_out, c_ids, c_pad, *, n: int, n_carry: int,
+                         interpret: bool = True) -> jax.Array:
+    """Single-group compatibility wrapper (legacy flat signature; c_ids is
+    accepted and ignored — row_ids doubles as the c gather index)."""
+    del c_ids
+    group = (row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out)
+    return sptrsv_groups_pallas((group,), c_pad, n=n, n_carry=n_carry,
+                                interpret=interpret)

@@ -1,13 +1,14 @@
 from .reference import solve_csr_seq, solve_transformed_seq, solve_dense
-from .schedule import (LevelSchedule, build_schedule, schedule_for_csr,
-                       schedule_for_preamble, schedule_for_transformed)
+from .schedule import (LevelSchedule, WidthGroup, build_schedule,
+                       schedule_for_csr, schedule_for_preamble,
+                       schedule_for_transformed, validate_schedule)
 from .levelset import DeviceSchedule, to_device, solve_scan, solve_unrolled, solve
 from . import distributed
 
 __all__ = [
     "solve_csr_seq", "solve_transformed_seq", "solve_dense",
-    "LevelSchedule", "build_schedule", "schedule_for_csr",
-    "schedule_for_preamble", "schedule_for_transformed",
+    "LevelSchedule", "WidthGroup", "build_schedule", "schedule_for_csr",
+    "schedule_for_preamble", "schedule_for_transformed", "validate_schedule",
     "DeviceSchedule", "to_device", "solve_scan", "solve_unrolled", "solve",
     "distributed",
 ]

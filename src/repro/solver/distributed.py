@@ -1,14 +1,18 @@
-"""Distributed SpTRSV via shard_map: rows of each step sharded over a mesh
-axis; x is replicated and re-synchronized with one all_gather per step.
+"""Distributed SpTRSV via shard_map: lanes of each step sharded over a mesh
+axis; x is replicated and re-synchronized with one all_gather family per
+step.
 
 The collective count is therefore proportional to the number of steps —
-i.e. to the level count the paper's transformation minimizes.  On a TPU
-mesh the transformation's "95% fewer synchronization barriers" is literally
-"95% fewer all_gathers" here (EXPERIMENTS.md §Perf quantifies this from the
-lowered HLO).
+i.e. to the step count the schedule compiler minimizes (compaction) on top
+of the level count the paper's transformation minimizes.  On a TPU mesh the
+transformation's "95% fewer synchronization barriers" is literally "95%
+fewer all_gathers" here.
 
-The schedule's chunk dimension C must be divisible by the axis size; each
-device owns C/devices lanes of every step.
+Width groups are sharded independently over their lane dimension and their
+per-step updates are concatenated before the gather, so the number of
+collectives per step stays constant no matter how many width classes the
+schedule uses.  Every group's lane capacity is padded up to a multiple of
+the axis size on the host before sharding.
 """
 from __future__ import annotations
 
@@ -20,40 +24,99 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .levelset import DeviceSchedule
-from .schedule import LevelSchedule
+from .schedule import LevelSchedule, WidthGroup
 
 __all__ = ["solve_sharded", "lower_sharded"]
 
+# jax >= 0.7 exposes shard_map/pcast at the top level; older releases keep
+# shard_map in jax.experimental and have no pcast (check_rep=False covers
+# the same replication-tracking escape hatch)
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                                   # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _esm
 
-def _sharded_body(c_pad, *leaves, n, n_carry, axis):
-    (row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out, c_ids,
-     is_final) = leaves
-    C_local = row_ids.shape[1]
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False)
+
+_pcast = getattr(jax.lax, "pcast", None)
+
+
+def _mark_varying(x, axis):
+    return _pcast(x, (axis,), to="varying") if _pcast is not None else x
+
+
+def _pad_group(g: WidthGroup, mult: int, n: int, n_carry: int) -> WidthGroup:
+    """Pad the lane dimension to a multiple of `mult` with inert lanes."""
+    S, C = g.row_ids.shape
+    C_new = -(-C // mult) * mult
+    if C_new == C:
+        return g
+    pad = C_new - C
+
+    def pad2(a, fill):
+        out = np.full((S, C_new), fill, dtype=a.dtype)
+        out[:, :C] = a
+        return out
+
+    dep_idx = np.zeros((S, C_new, g.dep_idx.shape[2]), dtype=g.dep_idx.dtype)
+    dep_idx[:, :C] = g.dep_idx
+    dep_coef = np.zeros((S, C_new, g.dep_coef.shape[2]),
+                        dtype=g.dep_coef.dtype)
+    dep_coef[:, :C] = g.dep_coef
+    return WidthGroup(
+        width=g.width, n=n,
+        row_ids=pad2(g.row_ids, n),
+        dep_idx=dep_idx,
+        dep_coef=dep_coef,
+        dinv=pad2(g.dinv, 0),
+        carry_in=None if g.carry_in is None else pad2(g.carry_in, n_carry),
+        carry_out=None if g.carry_out is None else
+        pad2(g.carry_out, n_carry + 1))
+
+
+def _sharded_body(c_pad, groups, *, n, n_carry, axis):
     x0 = jnp.zeros((n + 1,), dtype=c_pad.dtype)
     carry0 = jnp.zeros((n_carry + 2,), dtype=c_pad.dtype)
     # loop carries become device-varying after the per-step all_gather;
     # mark the (identical) initial values as varying to match
-    x0 = jax.lax.pcast(x0, (axis,), to="varying")
-    carry0 = jax.lax.pcast(carry0, (axis,), to="varying")
+    x0 = _mark_varying(x0, axis)
+    carry0 = _mark_varying(carry0, axis)
 
-    def body(state, s_leaves):
+    def body(state, step_groups):
         x, carry = state
-        (rids, didx, dcoef, dnv, cin, cout, cids, fin) = s_leaves
-        gathered = x[didx]                              # (C_local, D)
-        partial = jnp.sum(dcoef * gathered, axis=-1)
-        tot = partial + carry[cin]
-        xi = (c_pad[cids] - tot) * dnv
-        # publish this step's results to every device: one collective per
-        # step — the quantity the graph transformation minimizes
-        xi_all = jax.lax.all_gather(xi, axis, tiled=True)        # (C,)
-        rids_all = jax.lax.all_gather(rids, axis, tiled=True)
-        tot_all = jax.lax.all_gather(tot, axis, tiled=True)
-        cout_all = jax.lax.all_gather(cout, axis, tiled=True)
-        x = x.at[rids_all].set(xi_all)
-        carry = carry.at[cout_all].set(tot_all)
+        # carry machinery is dropped from the collective entirely when no
+        # group ships carry maps (the common, no-split-row case)
+        any_carries = any(len(g) == 6 for g in step_groups)
+        xis, tots, rids_l, couts_l = [], [], [], []
+        for g in step_groups:
+            rids, didx, dcoef, dnv = g[:4]
+            partial = jnp.sum(dcoef * x[didx], axis=-1)     # (C_local,)
+            tot = partial + carry[g[4]] if len(g) == 6 else partial
+            xis.append((c_pad[rids] - tot) * dnv)
+            rids_l.append(rids)
+            if any_carries:
+                tots.append(tot)
+                couts_l.append(g[5] if len(g) == 6 else
+                               jnp.full(rids.shape, n_carry + 1, jnp.int32))
+        # publish this step's results to every device: one concatenated
+        # all_gather family per step — the quantity compaction minimizes
+        xi_all = jax.lax.all_gather(jnp.concatenate(xis), axis, tiled=True)
+        rid_all = jax.lax.all_gather(jnp.concatenate(rids_l), axis,
+                                     tiled=True)
+        x = x.at[rid_all].set(xi_all)
+        if any_carries:
+            tot_all = jax.lax.all_gather(jnp.concatenate(tots), axis,
+                                         tiled=True)
+            cout_all = jax.lax.all_gather(jnp.concatenate(couts_l), axis,
+                                          tiled=True)
+            carry = carry.at[cout_all].set(tot_all)
         return (x, carry), None
 
-    (x, _), _ = jax.lax.scan(body, (x0, carry0), leaves)
+    (x, _), _ = jax.lax.scan(body, (x0, carry0), groups)
     return x[:n]
 
 
@@ -61,32 +124,34 @@ def solve_sharded(sched: LevelSchedule, c: np.ndarray, mesh: Mesh,
                   axis: str = "model") -> np.ndarray:
     """Solve with step lanes sharded over `axis` of `mesh`."""
     fn = lower_sharded(sched, mesh, axis=axis)
-    return np.asarray(fn(jnp.asarray(c, dtype=sched.dep_coef.dtype)))
+    return np.asarray(fn(jnp.asarray(c, dtype=sched.dtype)))
 
 
 def lower_sharded(sched: LevelSchedule, mesh: Mesh, axis: str = "model"):
     """Build the jitted sharded solver fn(c) -> x for a fixed schedule."""
     nshards = mesh.shape[axis]
-    assert sched.chunk % nshards == 0, \
-        f"chunk {sched.chunk} not divisible by axis size {nshards}"
-    ds = DeviceSchedule(sched)
-    leaves = ds.leaves()
-    # lanes sharded over the chunk dimension; indices/carries replicated math
-    lane_spec = tuple(
-        P(None, axis) if l.ndim == 2 else P(None, axis, None) for l in leaves)
+    padded = LevelSchedule(
+        groups=tuple(_pad_group(g, nshards, sched.n, sched.n_carry)
+                     for g in sched.groups),
+        n=sched.n, n_carry=sched.n_carry, num_levels=sched.num_levels,
+        chunk=sched.chunk, max_deps=sched.max_deps,
+        compacted=sched.compacted, build_ms=sched.build_ms)
+    ds = DeviceSchedule(padded)
+    groups = ds.leaves()
+    # lanes sharded over their group's lane dimension; x/c replicated
+    group_specs = tuple(
+        tuple(P(None, axis) if l.ndim == 2 else P(None, axis, None)
+              for l in g) for g in groups)
     body = functools.partial(_sharded_body, n=ds.n, n_carry=ds.n_carry,
                              axis=axis)
-    shmapped = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(),) + lane_spec,
-        out_specs=P(),
-        # x ends replicated (every device applies the same gathered
-        # updates), but the varying-axis tracker can't prove it
-        check_vma=False)
+    # x ends replicated (every device applies the same gathered updates),
+    # but the replication tracker can't prove it — hence the escape hatch
+    # inside _shard_map
+    shmapped = _shard_map(body, mesh, (P(), group_specs), P())
 
     @jax.jit
     def run(c):
         c_pad = jnp.concatenate([c, jnp.zeros((1,), c.dtype)])
-        return shmapped(c_pad, *leaves)
+        return shmapped(c_pad, groups)
 
     return run

@@ -1,19 +1,22 @@
 """Level-scheduled SpTRSV execution engines in JAX.
 
-Engines (all consume a LevelSchedule):
-  * solve_scan      — lax.scan over steps; HLO size O(1) in step count.
+Engines (all consume a width-bucketed LevelSchedule, see schedule.py DESIGN):
+  * solve_scan      — lax.scan over steps; HLO size O(num width groups),
+                      independent of step count.
   * solve_unrolled  — python loop over steps at trace time; exposes each
-                      level to XLA (bigger HLO, more fusion freedom).  Only
-                      sensible AFTER the transformation shrank the level
+                      step to XLA (bigger HLO, more fusion freedom).  Only
+                      sensible AFTER the transformation shrank the step
                       count — which is precisely the paper's point.
-  * multi-RHS via vmap (b may be (n,) or (n, R)).
+  * multi-RHS via vmap-style batched gathers (b may be (n,) or (n, R)).
+
+Each step applies its width groups sequentially.  That is safe because the
+schedule compiler guarantees no lane reads a row (or carry) finalized in the
+same step, so intra-step ordering is free.
 
 The preamble c = B'b (transformed systems) is applied outside: either a
 materialized-B' SpMV or a second schedule built on the T factor.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,84 +27,94 @@ from .schedule import LevelSchedule
 __all__ = ["DeviceSchedule", "to_device", "solve_scan", "solve_unrolled",
            "solve"]
 
+# leaf order within a group (row_ids doubles as the c gather index —
+# padding lanes hit the zero slot).  Carry leaves are present only for
+# groups holding partial-row lanes.
+GROUP_LEAVES = ("row_ids", "dep_idx", "dep_coef", "dinv")
+CARRY_LEAVES = ("carry_in", "carry_out")
+
 
 class DeviceSchedule:
-    """LevelSchedule staged as jnp arrays (a pytree of leaves)."""
+    """LevelSchedule staged as jnp arrays: a tuple of per-group leaf tuples
+    (4 leaves for carry-free groups, 6 with the carry slot maps)."""
 
     def __init__(self, sched: LevelSchedule):
-        self.row_ids = jnp.asarray(sched.row_ids)
-        self.dep_idx = jnp.asarray(sched.dep_idx)
-        self.dep_coef = jnp.asarray(sched.dep_coef)
-        self.dinv = jnp.asarray(sched.dinv)
-        self.carry_in = jnp.asarray(sched.carry_in)
-        self.carry_out = jnp.asarray(sched.carry_out)
-        self.c_ids = jnp.asarray(sched.c_ids)
-        self.is_final = jnp.asarray(sched.is_final)
+        self.groups = tuple(
+            tuple(jnp.asarray(getattr(g, name)) for name in GROUP_LEAVES) +
+            (tuple(jnp.asarray(getattr(g, name)) for name in CARRY_LEAVES)
+             if g.carry_in is not None else ())
+            for g in sched.groups)
+        self.group_widths = sched.group_widths
         self.n = sched.n
         self.n_carry = sched.n_carry
         self.num_steps = sched.num_steps
-        self.dtype = sched.dep_coef.dtype
+        self.dtype = sched.dtype
 
     def leaves(self):
-        return (self.row_ids, self.dep_idx, self.dep_coef, self.dinv,
-                self.carry_in, self.carry_out, self.c_ids, self.is_final)
+        """Pytree of stacked leaves; every array has leading dim num_steps."""
+        return self.groups
 
 
 def to_device(sched: LevelSchedule) -> DeviceSchedule:
     return DeviceSchedule(sched)
 
 
-def _step_body(x, carry, c_pad, leaves_s):
-    (row_ids, dep_idx, dep_coef, dinv, carry_in, carry_out, c_ids,
-     is_final) = leaves_s
+def _group_body(x, carry, c_pad, leaves_g):
+    """Apply one width-group tile of one step."""
+    row_ids, dep_idx, dep_coef, dinv = leaves_g[:4]
+    has_carry = len(leaves_g) == 6
     gathered = x[dep_idx]                      # (C, D) or (C, D, R)
     if gathered.ndim == 3:
         partial = jnp.einsum("cd,cdr->cr", dep_coef, gathered)
-        tot = partial + carry[carry_in]
-        xi = (c_pad[c_ids] - tot) * dinv[:, None]
+        tot = partial + carry[leaves_g[4]] if has_carry else partial
+        xi = (c_pad[row_ids] - tot) * dinv[:, None]
     else:
         partial = jnp.sum(dep_coef * gathered, axis=-1)   # (C,)
-        tot = partial + carry[carry_in]
-        xi = (c_pad[c_ids] - tot) * dinv
-    # padding lanes all write the garbage slot (index n / n_carry): in-bounds,
-    # duplicate-safe with plain scatter-set
+        tot = partial + carry[leaves_g[4]] if has_carry else partial
+        xi = (c_pad[row_ids] - tot) * dinv
+    # padding lanes all write the garbage slot (index n / n_carry+1):
+    # in-bounds, duplicate-safe with plain scatter-set
     x = x.at[row_ids].set(xi)
-    carry = carry.at[carry_out].set(tot)
+    if has_carry:
+        carry = carry.at[leaves_g[5]].set(tot)
     return x, carry
+
+
+def _step_body(x, carry, c_pad, step_groups):
+    for leaves_g in step_groups:
+        x, carry = _group_body(x, carry, c_pad, leaves_g)
+    return x, carry
+
+
+def _init_state(dsched: DeviceSchedule, c: jax.Array):
+    n = dsched.n
+    tail = (c.shape[1],) if c.ndim == 2 else ()
+    x0 = jnp.zeros((n + 1,) + tail, dtype=c.dtype)
+    carry0 = jnp.zeros((dsched.n_carry + 2,) + tail, dtype=c.dtype)
+    c_pad = jnp.concatenate([c, jnp.zeros((1,) + tail, c.dtype)], axis=0)
+    return x0, carry0, c_pad
 
 
 def solve_scan(dsched: DeviceSchedule, c: jax.Array) -> jax.Array:
     """Solve given preamble vector c (= b for untransformed systems)."""
-    n = dsched.n
-    multi = c.ndim == 2
-    tail = (c.shape[1],) if multi else ()
-    x0 = jnp.zeros((n + 1,) + tail, dtype=c.dtype)
-    carry0 = jnp.zeros((dsched.n_carry + 2,) + tail, dtype=c.dtype)
-    c_pad = jnp.concatenate([c, jnp.zeros((1,) + tail, c.dtype)], axis=0)
+    x0, carry0, c_pad = _init_state(dsched, c)
 
-    def body(state, leaves_s):
-        x, carry = state
-        x, carry = _step_body(x, carry, c_pad, leaves_s)
+    def body(state, step_groups):
+        x, carry = _step_body(*state, c_pad, step_groups)
         return (x, carry), None
 
     (x, _), _ = jax.lax.scan(body, (x0, carry0), dsched.leaves())
-    return x[:n]
+    return x[:dsched.n]
 
 
 def solve_unrolled(dsched: DeviceSchedule, c: jax.Array) -> jax.Array:
     """Trace-time unrolled engine (use when step count is small — i.e. after
     the transformation)."""
-    n = dsched.n
-    multi = c.ndim == 2
-    tail = (c.shape[1],) if multi else ()
-    x = jnp.zeros((n + 1,) + tail, dtype=c.dtype)
-    carry = jnp.zeros((dsched.n_carry + 2,) + tail, dtype=c.dtype)
-    c_pad = jnp.concatenate([c, jnp.zeros((1,) + tail, c.dtype)], axis=0)
-    leaves = dsched.leaves()
+    x, carry, c_pad = _init_state(dsched, c)
     for s in range(dsched.num_steps):
-        leaves_s = tuple(l[s] for l in leaves)
-        x, carry = _step_body(x, carry, c_pad, leaves_s)
-    return x[:n]
+        step_groups = tuple(tuple(l[s] for l in g) for g in dsched.leaves())
+        x, carry = _step_body(x, carry, c_pad, step_groups)
+    return x[:dsched.n]
 
 
 def solve(sched: LevelSchedule, c: np.ndarray, engine: str = "scan",

@@ -53,30 +53,18 @@ def build_levels(L: CSR) -> LevelSets:
     vectorization we exploit that dependencies always point backwards.
     """
     n = L.n_rows
-    level = np.zeros(n, dtype=np.int64)
     indptr, indices = L.indptr, L.indices
     # strict-lower mask per entry
     rows = np.repeat(np.arange(n), np.diff(indptr))
     strict = indices < rows
-    # Forward sweep.  Python-level loop is too slow for n ~ 1e5 with ~3 nnz/row
-    # ... actually it's fine (~1e5 iterations), but we chunk via reduceat for
-    # rows whose deps are all already-finalized, which is all of them in a
-    # lower-triangular matrix.  reduceat needs contiguous segments; do it in
-    # one pass:
-    #   level[i] = 1 + max(level[j] for j strict deps) ; but level[j] values
-    # are produced during the same sweep, so a fully vectorized one-shot pass
-    # is impossible in general.  However we can sweep in "waves": repeatedly
-    # assign levels to rows whose deps are all assigned.  Expected number of
-    # waves = DAG depth, each wave vectorized -> O(depth * nnz) worst case.
-    # For matrices with huge depth (lung2-like: depth ~ 479) this is still
-    # cheap; for pathological chains (depth ~ n) fall back to the serial loop.
+    # level[i] = 1 + max(level[j] for j strict deps); level[j] values are
+    # produced during the same sweep, so a fully vectorized one-shot pass is
+    # impossible in general.  Instead sweep in "waves": repeatedly assign
+    # levels to rows whose deps are all assigned.  Number of waves = DAG
+    # depth, each wave vectorized -> O(depth * nnz) worst case.
     sl_counts = np.zeros(n, dtype=np.int64)
     np.add.at(sl_counts, rows[strict], 1)
-    depth_estimate_serial = n > 200_000
-    if depth_estimate_serial or True:
-        # Serial sweep with reduceat batching: compute per-row max of dep
-        # levels via np.maximum.reduceat over the strict entries, in waves.
-        level = _wave_sweep(n, rows, indices, strict, sl_counts)
+    level = _wave_sweep(n, rows, indices, strict, sl_counts)
     order = np.lexsort((np.arange(n), level))
     num_levels = int(level.max()) + 1 if n else 0
     counts = np.bincount(level, minlength=num_levels)

@@ -1,0 +1,40 @@
+"""Benchmark drivers are import-checked and executed at reduced scale in
+tier-1 (ISSUE 1 satellite: `benchmarks/run.py --smoke` wired to a pytest
+marker)."""
+import json
+
+import pytest
+
+
+@pytest.mark.bench
+def test_run_smoke_emits_bench_schedule(tmp_path):
+    from benchmarks import run as brun
+
+    out = tmp_path / "BENCH_schedule.json"
+    rec = brun.smoke(out_path=str(out))
+    assert out.exists()
+    data = json.loads(out.read_text())
+    assert data == rec
+    assert set(data["matrices"]) == {"lung2_like@0.08", "torso2_like@0.06"}
+    for m in data["matrices"].values():
+        assert m["after"]["build_ms"] > 0
+        assert m["after"]["steps"] <= m["before"]["steps"]
+        assert m["after"]["padded_flops"] < m["before"]["padded_flops"]
+        assert m["legacy_build_ms"] > m["after"]["build_ms"]
+        assert m["after"]["real_flops"] == m["before"]["real_flops"]
+
+
+@pytest.mark.bench
+def test_bench_schedule_fields(tmp_path):
+    """BENCH_schedule.json carries the perf-trajectory fields."""
+    from benchmarks.run import bench_schedule
+
+    rec = bench_schedule(out_path=str(tmp_path / "b.json"),
+                         scales=(0.05, 0.05), reps=1, time_solve=True)
+    for m in rec["matrices"].values():
+        for side in ("before", "after"):
+            for field in ("build_ms", "steps", "levels", "padded_flops",
+                          "real_flops", "us_per_solve", "model_tpu_us"):
+                assert field in m[side]
+        assert "build_speedup_vs_legacy" in m
+        assert "padded_flops_reduction" in m

@@ -1,8 +1,17 @@
-"""Level-set construction: vs networkx longest-path oracle + invariants."""
-import networkx as nx
+"""Level-set construction: vs networkx longest-path oracle + invariants.
+
+Optional deps (hypothesis, networkx) must not break collection: property
+tests skip via the _optional_deps shim, oracle tests via importorskip-style
+guards.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional_deps import given, settings, st
+
+try:
+    import networkx as nx
+except ModuleNotFoundError:             # pragma: no cover - env dependent
+    nx = None
 
 from repro.sparse import build_levels, generators, level_costs
 from repro.sparse.csr import CSR, from_coo
@@ -23,6 +32,7 @@ def _nx_levels(L: CSR) -> np.ndarray:
     return level
 
 
+@pytest.mark.skipif(nx is None, reason="networkx not installed")
 @pytest.mark.parametrize("gen,kw", [
     (generators.chain, dict(n=50)),
     (generators.banded, dict(n=80, bandwidth=3)),

@@ -1,0 +1,170 @@
+"""Schedule-compiler equivalence and invariants (ISSUE 1 tentpole).
+
+Every configuration of the compiler — level-aligned vs compacted, single
+vs multi width bucket, whole rows vs partial-row splits — must solve the
+same systems as the sequential reference, and every emitted schedule must
+satisfy the structural invariants validate_schedule audits (no same-step
+dependency, carry chains ordered, rows finalized exactly once).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _optional_deps import given, settings, st
+
+from repro.core import AvgLevelCost, NoRewrite, transform
+from repro.kernels import ops
+from repro.solver import (schedule_for_csr, schedule_for_preamble,
+                          schedule_for_transformed, solve, solve_csr_seq,
+                          to_device, validate_schedule)
+from repro.solver.levelset import solve_scan, solve_unrolled
+from repro.sparse import build_levels, generators
+from repro.sparse.csr import tril
+
+
+def _check(L, chunk, max_deps, compact, widths=(4, 8, 16, 32),
+           engine="scan", rtol=2e-5):
+    lv = build_levels(L)
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    x_ref = solve_csr_seq(L, b)
+    sched = schedule_for_csr(L, lv, chunk=chunk, max_deps=max_deps,
+                             compact=compact, widths=widths,
+                             dtype=np.float32)
+    validate_schedule(sched, tril(L, keep_diagonal=False), L.diagonal_fast())
+    x = solve(sched, b, engine=engine)
+    scale = np.maximum(1.0, np.abs(x_ref).max())
+    assert np.abs(x - x_ref).max() / scale < rtol
+    return sched
+
+
+GENS = [
+    (generators.chain, dict(n=60)),
+    (generators.banded, dict(n=90, bandwidth=7, seed=3)),
+    (generators.random_lower, dict(n=250, avg_offdiag=2.5, seed=11,
+                                   max_back=40)),
+    (generators.poisson2d_ic0, dict(nx=11, ny=8)),
+]
+
+
+@pytest.mark.parametrize("compact", [False, True])
+@pytest.mark.parametrize("gen,kw", GENS)
+def test_equivalence_across_generators(gen, kw, compact):
+    L = gen(**kw)
+    _check(L, chunk=32, max_deps=4, compact=compact)
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_partial_row_splits(compact):
+    """max_deps < row nnz forces carry-chained partial rows."""
+    L = generators.banded(80, 11, seed=5)      # rows with 11 deps
+    sched = _check(L, chunk=16, max_deps=3, compact=compact)
+    assert sched.n_carry > 1                   # splitting happened
+    assert any(g.carry_in is not None for g in sched.groups)
+
+
+def test_compaction_overlaps_partial_rows_with_earlier_levels():
+    """Leading segments of split rows start before their row's level, so
+    compaction needs far fewer steps than the level-aligned layout."""
+    L = generators.banded(96, 10, seed=2)
+    lv = build_levels(L)
+    aligned = schedule_for_csr(L, lv, chunk=16, max_deps=4, compact=False)
+    compacted = schedule_for_csr(L, lv, chunk=16, max_deps=4, compact=True)
+    assert compacted.num_steps < aligned.num_steps
+    assert compacted.num_steps <= aligned.num_levels
+
+
+def test_compaction_never_exceeds_level_aligned_steps():
+    for gen, kw in GENS:
+        L = gen(**kw)
+        lv = build_levels(L)
+        for chunk, md in [(8, 2), (64, 8)]:
+            s0 = schedule_for_csr(L, lv, chunk=chunk, max_deps=md,
+                                  compact=False)
+            s1 = schedule_for_csr(L, lv, chunk=chunk, max_deps=md,
+                                  compact=True)
+            assert s1.num_steps <= s0.num_steps
+
+
+def test_width_bucketing_cuts_padded_flops():
+    """Multi-bucket schedules do the same real FLOPs with less padding than
+    a single global max_deps-wide bucket."""
+    L = generators.random_lower(400, avg_offdiag=2.0, seed=7, max_back=60)
+    lv = build_levels(L)
+    wide = schedule_for_csr(L, lv, chunk=64, max_deps=16, widths=(16,))
+    bucketed = schedule_for_csr(L, lv, chunk=64, max_deps=16,
+                                widths=(4, 8, 16, 32))
+    assert bucketed.flops() == wide.flops()
+    assert bucketed.padded_flops() < wide.padded_flops()
+    assert len(bucketed.groups) > 1
+    b = np.random.default_rng(1).standard_normal(400)
+    x_ref = solve_csr_seq(L, b)
+    for s in (wide, bucketed):
+        x = solve(s, b)
+        assert np.abs(x - x_ref).max() / max(1.0, np.abs(x_ref).max()) < 2e-5
+
+
+def test_multi_rhs_bucketed():
+    L = generators.random_lower(150, avg_offdiag=2.5, seed=8, max_back=20)
+    lv = build_levels(L)
+    sched = schedule_for_csr(L, lv, chunk=32, max_deps=4, compact=True)
+    B = np.random.default_rng(1).standard_normal((150, 6))
+    ds = to_device(sched)
+    X = np.asarray(solve_scan(ds, jnp.asarray(B, jnp.float32)))
+    Xu = np.asarray(solve_unrolled(ds, jnp.asarray(B, jnp.float32)))
+    for j in range(6):
+        x_ref = solve_csr_seq(L, B[:, j])
+        assert np.abs(X[:, j] - x_ref).max() < 2e-4
+        assert np.abs(Xu[:, j] - x_ref).max() < 2e-4
+
+
+def test_transformed_compacted_matches_reference():
+    """Compaction of transformed (merged-level) systems still solves right
+    and beats the untransformed step count."""
+    L = generators.lung2_like(scale=0.08)
+    lv = build_levels(L)
+    ts = transform(L, AvgLevelCost(), validate=False, codegen=False)
+    s0 = schedule_for_csr(L, lv, chunk=128, max_deps=8)
+    s1 = schedule_for_transformed(ts, chunk=128, max_deps=8)
+    validate_schedule(s1, ts.A, ts.diag)
+    assert s1.num_steps < s0.num_steps
+    b = np.random.default_rng(2).standard_normal(L.n_rows)
+    c = ts.preamble(b)
+    x = solve(s1, c)
+    x_ref = solve_csr_seq(L, b)
+    scale = np.maximum(1.0, np.abs(x_ref).max())
+    assert np.abs(x - x_ref).max() / scale < 2e-4
+
+
+def test_preamble_schedule_compacted():
+    L = generators.lung2_like(scale=0.05)
+    ts = transform(L, AvgLevelCost(), validate=False, codegen=False)
+    b = np.random.default_rng(3).standard_normal(L.n_rows)
+    c_ref = ts.preamble(b)
+    psched, src, row_pos = schedule_for_preamble(ts, chunk=64, max_deps=8)
+    assert psched is not None
+    c_ent = solve(psched, b[src].astype(np.float32))
+    np.testing.assert_allclose(c_ent[row_pos], c_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_kernel_bucketed_groups():
+    """The grouped Pallas kernel path handles multi-bucket, carry-chained
+    schedules (interpret mode) identically to the jnp oracle."""
+    L = generators.banded(90, 9, seed=4)
+    lv = build_levels(L)
+    sched = schedule_for_csr(L, lv, chunk=16, max_deps=4, compact=True,
+                             widths=(2, 4))
+    b = np.random.default_rng(5).standard_normal(90)
+    x_ref = solve_csr_seq(L, b)
+    x_pal = ops.sptrsv_solve(sched, b, interpret=True)
+    x_orc = ops.sptrsv_solve(sched, b, use_ref=True)
+    np.testing.assert_allclose(x_pal, x_orc, rtol=1e-6, atol=1e-6)
+    assert np.abs(x_pal - x_ref).max() < 1e-3
+
+
+@given(st.integers(20, 160), st.integers(0, 10**5),
+       st.sampled_from([(8, 2, False), (8, 2, True), (16, 4, True),
+                        (64, 8, True)]))
+@settings(max_examples=20, deadline=None)
+def test_property_random_matrices(n, seed, cfg):
+    chunk, max_deps, compact = cfg
+    L = generators.random_lower(n, avg_offdiag=2.5, seed=seed, max_back=12)
+    _check(L, chunk, max_deps, compact, rtol=5e-4)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional_deps import given, settings, st
 
 from repro.core import AvgLevelCost, NoRewrite, transform
 from repro.solver import (schedule_for_csr, schedule_for_transformed, solve,

@@ -2,7 +2,7 @@
 invariants, Table-I metric behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional_deps import given, settings, st
 
 from repro.core import (AvgLevelCost, ConstrainedAvgLevelCost, GraphView,
                         ManualEveryK, NoRewrite, transform)
