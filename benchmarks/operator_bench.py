@@ -1,0 +1,111 @@
+"""Tuner-vs-fixed-strategy benchmark -> experiments/BENCH_operator.json.
+
+For each benchmark matrix, builds a TriangularOperator per FIXED strategy
+(the four shipped ones, default parameters) plus one auto-tuned operator,
+and measures warm end-to-end per-solve wall time (host preamble + jitted
+scan engine, refinement off) for a single RHS and a batched (n, k) block.
+
+The headline check (mirrors the ISSUE acceptance criterion): the tuner's
+pick is never slower than the WORST fixed strategy — i.e. "auto" protects
+users from hand-picking the wrong rewrite for their matrix.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (AvgLevelCost, ConstrainedAvgLevelCost, ManualEveryK,
+                        NoRewrite, strategy_label)
+from repro.solver import TriangularOperator
+from repro.sparse import generators
+
+
+def fixed_strategies() -> list:
+    return [NoRewrite(), AvgLevelCost(), ManualEveryK(),
+            ConstrainedAvgLevelCost()]
+
+
+def _solve_us(op: TriangularOperator, b: np.ndarray, iters: int) -> float:
+    """Warm end-to-end per-solve wall time (preamble + engine, no refine);
+    min over iters — the robust estimator under scheduler noise."""
+    op.solve(b, max_refine=0)               # compile / warm the jit cache
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        op.solve(b, max_refine=0)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench_matrix(L, chunk: int = 256, max_deps: int = 16, iters: int = 3,
+                 rhs_batch: int = 8, measure_top_k: int = 3) -> dict:
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(L.n_rows)
+    B = rng.standard_normal((L.n_rows, rhs_batch))
+    fixed = {}
+    for strat in fixed_strategies():
+        op = TriangularOperator.from_csr(L, tune=strat, chunk=chunk,
+                                         max_deps=max_deps, cache=False)
+        fixed[strategy_label(strat)] = {
+            "measured_us": round(_solve_us(op, b, iters), 1),
+            "batched_us": round(_solve_us(op, B, iters), 1),
+            "steps": op.schedule.num_steps,
+            "nnz_T": op.transformed.metrics.nnz_T,
+        }
+    op = TriangularOperator.from_csr(L, tune="auto", chunk=chunk,
+                                     max_deps=max_deps, cache=False,
+                                     measure_top_k=measure_top_k)
+    tuner_us = round(_solve_us(op, b, iters), 1)
+    worst = max(v["measured_us"] for v in fixed.values())
+    best = min(v["measured_us"] for v in fixed.values())
+    return {
+        "n": L.n_rows, "nnz": L.nnz, "rhs_batch": rhs_batch,
+        "fixed": fixed,
+        "tuner": {
+            "pick": op.strategy,
+            "measured_us": tuner_us,
+            "batched_us": round(_solve_us(op, B, iters), 1),
+            "tune_ms": round(op.stats.tune_ms, 1),
+            "report": op.report.to_dict() if op.report is not None else None,
+        },
+        "worst_fixed_us": worst,
+        "best_fixed_us": best,
+        "tuner_not_slower_than_worst": bool(tuner_us <= worst),
+    }
+
+
+def run(out_path="experiments/BENCH_operator.json", scales=(0.1, 0.08),
+        iters: int = 3, chunk: int = 256, max_deps: int = 16,
+        rhs_batch: int = 8, measure_top_k: int = 3) -> dict:
+    record = {
+        "config": {"chunk": chunk, "max_deps": max_deps,
+                   "scales": list(scales), "iters": iters,
+                   "rhs_batch": rhs_batch, "measure_top_k": measure_top_k},
+        "matrices": {},
+    }
+    for name, L in (
+            (f"lung2_like@{scales[0]}", generators.lung2_like(scales[0])),
+            (f"torso2_like@{scales[1]}", generators.torso2_like(scales[1]))):
+        m = bench_matrix(L, chunk=chunk, max_deps=max_deps, iters=iters,
+                         rhs_batch=rhs_batch, measure_top_k=measure_top_k)
+        record["matrices"][name] = m
+        print(f"{name}: tuner pick = {m['tuner']['pick']} "
+              f"({m['tuner']['measured_us']}us, batched x{rhs_batch} "
+              f"{m['tuner']['batched_us']}us) vs fixed "
+              f"[{m['best_fixed_us']} .. {m['worst_fixed_us']}]us "
+              f"-> not_slower_than_worst={m['tuner_not_slower_than_worst']}")
+        for label, v in m["fixed"].items():
+            print(f"    {label:<42} {v['measured_us']:>10}us "
+                  f"steps={v['steps']:<5} nnz_T={v['nnz_T']}")
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -8,12 +8,17 @@ Sections:
   level_profiles  — paper Fig. 5/6 (per-level cost profiles)
   solver_bench    — solve wall time (CPU measured + TPU roofline model)
   schedule        — schedule-compiler before/after (BENCH_schedule.json)
+  operator        — auto-tuner vs fixed strategies (BENCH_operator.json)
 
 --smoke runs every section at reduced scale (seconds, not minutes) so the
 tier-1 suite can import-check and execute the drivers (pytest -m bench).
-Both modes write experiments/BENCH_schedule.json: build ms (legacy loop vs
-vectorized), steps, padded vs real FLOPs, and us_per_solve before/after —
-the perf trajectory of the schedule compiler.
+The full run writes experiments/BENCH_schedule.json (build ms, steps,
+padded vs real FLOPs, us_per_solve before/after — the schedule compiler's
+perf trajectory) and experiments/BENCH_operator.json (tuner-vs-fixed-
+strategy table — the portfolio auto-tuner's guarantee).  Smoke mode
+executes every driver but persists nothing unless smoke() is given
+explicit out paths — the committed full-scale artifacts must not be
+clobbered by reduced-scale runs.
 """
 from __future__ import annotations
 
@@ -44,9 +49,10 @@ def bench_schedule(out_path="experiments/BENCH_schedule.json",
     return record
 
 
-def smoke(out_path="experiments/BENCH_schedule.json") -> dict:
+def smoke(out_path=None, operator_out=None) -> dict:
     """Reduced-scale pass over every benchmark driver (tier-1 smoke)."""
     import benchmarks.level_profiles as lp
+    import benchmarks.operator_bench as ob
     import benchmarks.solver_bench as sb
     import benchmarks.table1 as t1
     from repro.sparse import generators
@@ -62,6 +68,8 @@ def smoke(out_path="experiments/BENCH_schedule.json") -> dict:
         sb.run(csv_out=None, scales=(0.05, 0.05), iters=2)
     finally:
         sio.load_named = real_load
+    ob.run(out_path=operator_out, scales=(0.04, 0.04), iters=1,
+           measure_top_k=0)
     return bench_schedule(out_path, scales=(0.08, 0.06), reps=2,
                           time_solve=False)
 
@@ -93,6 +101,9 @@ def main() -> None:
               f"{m['before']['padded_flops']} -> "
               f"{m['after']['padded_flops']} "
               f"(-{m['padded_flops_reduction']:.0%})")
+    print("\n== Operator auto-tuner vs fixed strategies ==")
+    from benchmarks import operator_bench
+    operator_bench.run(out_path="experiments/BENCH_operator.json")
     _roofline_summary()
     print(f"\ntotal {time.time() - t0:.1f}s")
 

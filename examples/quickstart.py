@@ -1,12 +1,12 @@
-"""Quickstart: transform a sparse triangular system and solve it.
+"""Quickstart: auto-tune, compile, and solve a sparse triangular system.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The README's quickstart snippet is kept in sync with this file.
 """
 import numpy as np
 
-from repro.core import AvgLevelCost, transform
-from repro.solver import (schedule_for_csr, schedule_for_transformed, solve,
-                          solve_csr_seq)
+from repro.solver import TriangularOperator, solve_csr_seq
 from repro.sparse import build_levels, generators
 
 
@@ -16,31 +16,34 @@ def main():
     levels = build_levels(L)
     print(f"matrix: n={L.n_rows} nnz={L.nnz} levels={levels.num_levels}")
 
-    # 2. the paper's transformation: fatten thin levels by equation rewriting
-    ts = transform(L, AvgLevelCost())
-    m = ts.metrics
-    print(f"transformed: levels {m.num_levels_before} -> "
-          f"{m.num_levels_after} "
-          f"({100 * (1 - m.num_levels_after / m.num_levels_before):.0f}% "
-          f"fewer barriers), total cost {m.total_level_cost_before} -> "
-          f"{m.total_level_cost_after}")
+    # 2. one entry point: the portfolio auto-tuner picks the best
+    #    transformation strategy, compiles the schedule, and caches the
+    #    artifact keyed by the matrix fingerprint (second run is instant)
+    op = TriangularOperator.from_csr(L, tune="auto", chunk=128, max_deps=8)
+    print(f"\ntuner pick: {op.strategy} "
+          f"({op.schedule.num_steps} steps, cache={op.stats.cache_source})")
+    print("\nranked strategy report:")
+    print(op.report.table() if op.report is not None else "(cached)")
 
-    # 3. solve both ways — identical solutions
+    # 3. solve — single RHS, float64 accuracy via iterative refinement
     b = np.random.default_rng(0).standard_normal(L.n_rows)
+    x = op.solve(b)
     x_ref = solve_csr_seq(L, b)
+    print(f"\nsingle RHS: max err {np.abs(x - x_ref).max():.2e} "
+          f"(residual {op.stats.last_residual:.2e}, "
+          f"{op.stats.refine_rounds} refinement rounds)")
 
-    s0 = schedule_for_csr(L, levels, chunk=128, max_deps=8)
-    x0 = solve(s0, b)
-    s1 = schedule_for_transformed(ts, chunk=128, max_deps=8)
-    x1 = solve(s1, ts.preamble(b).astype(np.float32))
-    print(f"schedule steps: {s0.num_steps} -> {s1.num_steps}")
-    print(f"max err untransformed {np.abs(x0 - x_ref).max():.2e}, "
-          f"transformed {np.abs(x1 - x_ref).max():.2e}")
+    # 4. batched multi-RHS — one transformed matrix amortized over many b's
+    B = np.random.default_rng(1).standard_normal((L.n_rows, 8))
+    X = op.solve(B)
+    errs = [np.abs(X[:, j] - solve_csr_seq(L, B[:, j])).max()
+            for j in range(B.shape[1])]
+    print(f"batched (n, 8): max err {max(errs):.2e}")
 
-    # 4. the same solve through the Pallas TPU kernel (interpret mode on CPU)
-    from repro.kernels import ops
-    x2 = ops.sptrsv_solve(s1, ts.preamble(b).astype(np.float32))
-    print(f"pallas kernel err {np.abs(x2 - x_ref).max():.2e}")
+    # 5. the same solve through the Pallas TPU kernel (interpret mode on CPU)
+    x2 = op.solve(b, engine="pallas")
+    print(f"pallas engine: max err {np.abs(x2 - x_ref).max():.2e}")
+    print(f"\nper-solve stats: {op.stats.to_dict()}")
 
 
 if __name__ == "__main__":

@@ -7,14 +7,20 @@ manual / constrained) mutating an EquationStore -> TransformedSystem
 from .graph import CostModel, GraphView
 from .rewrite import EquationStore, RewriteResult
 from .strategies import (AvgLevelCost, ConstrainedAvgLevelCost,
-                         CriticalPathRewrite, ManualEveryK, NoRewrite)
+                         CriticalPathRewrite, ManualEveryK, NoRewrite,
+                         strategy_label)
 from .transform import TransformMetrics, TransformedSystem, transform
 from .codegen import generate_c_source, generated_code_bytes
+from .portfolio import (PortfolioCandidate, PortfolioReport,
+                        StrategyPortfolio, default_candidates, make_strategy)
+from .portfolio import CostModel as TuningCostModel
 
 __all__ = [
     "CostModel", "GraphView", "EquationStore", "RewriteResult",
     "NoRewrite", "AvgLevelCost", "ManualEveryK", "ConstrainedAvgLevelCost",
-    "CriticalPathRewrite",
+    "CriticalPathRewrite", "strategy_label",
     "TransformMetrics", "TransformedSystem", "transform",
     "generate_c_source", "generated_code_bytes",
+    "StrategyPortfolio", "PortfolioCandidate", "PortfolioReport",
+    "TuningCostModel", "default_candidates", "make_strategy",
 ]

@@ -1,0 +1,293 @@
+"""Strategy-portfolio auto-tuner: pick the best transform per matrix.
+
+The paper's conclusion is that no single rewrite wins everywhere — the
+results "provide several hints on how to craft a collection of strategies".
+This module makes that operational: a `StrategyPortfolio` enumerates
+candidate strategies (the four shipped ones plus parameter sweeps), runs the
+full transform + schedule compile for each, scores every candidate with an
+analytic per-solve cost model, and returns a ranked `PortfolioReport`.
+
+Cost model (per solve, microseconds; all constants calibratable):
+
+    main     = steps * step_overhead_us
+             + padded_flops * us_per_padded_flop      (width-bucketed tiles)
+             + schedule_bytes * us_per_byte           (HBM streaming)
+    preamble = nnz_T * us_per_preamble_nnz            (T-factor any-b charge)
+    total    = main + preamble
+
+`steps` and `padded_flops` come from the *compiled* LevelSchedule (so step
+compaction and width bucketing are credited), `nnz_T` from TransformMetrics.
+The defaults mirror the TPU roofline constants of benchmarks/solver_bench.py;
+`CostModel.cpu()` is calibrated for the CPU scan engine, where per-step scan
+overhead dominates.  An optional *measured* mode micro-benchmarks the top-k
+candidates through the real engine and re-ranks them by wall time.
+
+Strategy selection guidance (which matrix shapes favour which strategy) is
+documented in docs/strategies.md; the end-to-end serving facade that consumes
+this tuner is repro.solver.operator.TriangularOperator.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..sparse.csr import CSR
+from .strategies import (AvgLevelCost, ConstrainedAvgLevelCost,
+                         CriticalPathRewrite, ManualEveryK, NoRewrite,
+                         Strategy, strategy_label)
+from .transform import TransformMetrics, TransformedSystem, transform
+
+__all__ = ["CostModel", "PortfolioCandidate", "PortfolioReport",
+           "StrategyPortfolio", "default_candidates", "make_strategy",
+           "STRATEGY_REGISTRY"]
+
+# stable strategy name -> zero-arg-constructible class (docs/strategies.md)
+STRATEGY_REGISTRY = {
+    "no_rewriting": NoRewrite,
+    "avgLevelCost": AvgLevelCost,
+    "manual_every_k": ManualEveryK,
+    "constrained_avg": ConstrainedAvgLevelCost,
+    "critical_path": CriticalPathRewrite,
+}
+
+
+def make_strategy(spec) -> Strategy:
+    """Resolve a strategy spec: a Strategy instance passes through, a stable
+    name string (see STRATEGY_REGISTRY) constructs the default instance."""
+    if isinstance(spec, str):
+        try:
+            return STRATEGY_REGISTRY[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown strategy {spec!r}; expected one of "
+                f"{sorted(STRATEGY_REGISTRY)} or a Strategy instance") from None
+    if not hasattr(spec, "apply"):
+        raise TypeError(f"not a Strategy: {spec!r}")
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Calibratable constants of the analytic per-solve cost (microseconds).
+
+    Defaults model a TPU chip (HBM ~819 GB/s, VPU ~4 TF/s f32, ~2 us grid
+    step); `cpu()` re-weights for the jitted CPU scan engine where the
+    per-step dispatch overhead dominates everything else.
+    """
+
+    step_overhead_us: float = 2.0
+    us_per_padded_flop: float = 1.0 / 4e6       # 4 TF/s  -> 4e6 flop/us
+    us_per_byte: float = 1.0 / 819e3            # 819 GB/s -> 819e3 B/us
+    us_per_preamble_nnz: float = 5e-3           # T-factor any-b charge
+
+    @classmethod
+    def cpu(cls) -> "CostModel":
+        """Weights calibrated against the measured CPU scan engine
+        (BENCH_schedule.json: ~10-16 us/step, flops nearly free)."""
+        return cls(step_overhead_us=12.0, us_per_padded_flop=1.0 / 1e5,
+                   us_per_byte=1.0 / 4e6, us_per_preamble_nnz=5e-3)
+
+    def predict(self, sched, metrics: TransformMetrics) -> dict:
+        """Cost breakdown (us) for one compiled schedule + its transform."""
+        steps_us = sched.num_steps * self.step_overhead_us
+        flops_us = sched.padded_flops() * self.us_per_padded_flop
+        bytes_us = sched.memory_bytes() * self.us_per_byte
+        pre_us = metrics.nnz_T * self.us_per_preamble_nnz
+        return {
+            "steps_us": steps_us, "flops_us": flops_us,
+            "bytes_us": bytes_us, "preamble_us": pre_us,
+            "total_us": steps_us + flops_us + bytes_us + pre_us,
+        }
+
+
+@dataclasses.dataclass
+class PortfolioCandidate:
+    """One scored (strategy, transform, schedule) triple.
+
+    `ts`/`sched`/`strategy` are dropped by `slim()` (persistent caches store
+    only the chosen artifact, not every candidate's)."""
+
+    label: str
+    predicted_us: float
+    breakdown: dict
+    steps: int
+    num_levels: int
+    padded_flops: int
+    memory_bytes: int
+    nnz_T: int
+    metrics: TransformMetrics | None = None
+    measured_us: float | None = None
+    error: str | None = None
+    strategy: Strategy | None = None
+    ts: TransformedSystem | None = None
+    sched: object | None = None
+
+    def slim(self) -> "PortfolioCandidate":
+        return dataclasses.replace(self, strategy=None, ts=None, sched=None)
+
+
+@dataclasses.dataclass
+class PortfolioReport:
+    """Ranked tuner output: candidates[0] is the pick."""
+
+    matrix: dict
+    candidates: list
+    cost_model: CostModel
+    measured_top_k: int
+    tune_ms: float
+
+    @property
+    def best(self) -> PortfolioCandidate:
+        return self.candidates[0]
+
+    def slim(self) -> "PortfolioReport":
+        return dataclasses.replace(
+            self, candidates=[c.slim() for c in self.candidates])
+
+    def to_dict(self) -> dict:
+        return {
+            "matrix": self.matrix,
+            "cost_model": dataclasses.asdict(self.cost_model),
+            "measured_top_k": self.measured_top_k,
+            "tune_ms": round(self.tune_ms, 2),
+            "candidates": [{
+                "rank": i, "label": c.label,
+                "predicted_us": (None if not np.isfinite(c.predicted_us)
+                                 else round(c.predicted_us, 1)),
+                "measured_us": (None if c.measured_us is None
+                                else round(c.measured_us, 1)),
+                "steps": c.steps, "levels": c.num_levels,
+                "padded_flops": c.padded_flops,
+                "memory_bytes": c.memory_bytes, "nnz_T": c.nnz_T,
+                "breakdown": {k: round(v, 2) for k, v in c.breakdown.items()},
+                "error": c.error,
+            } for i, c in enumerate(self.candidates)],
+        }
+
+    def table(self) -> str:
+        """Human-readable ranked table (what quickstart.py prints)."""
+        hdr = (f"{'rank':>4}  {'strategy':<42} {'pred_us':>10} "
+               f"{'meas_us':>10} {'steps':>6} {'levels':>6} "
+               f"{'padded_flops':>12} {'nnz_T':>8}")
+        lines = [hdr, "-" * len(hdr)]
+        for i, c in enumerate(self.candidates):
+            meas = f"{c.measured_us:10.1f}" if c.measured_us is not None \
+                else f"{'-':>10}"
+            if c.error is not None:
+                lines.append(f"{i:>4}  {c.label:<42} {'FAILED':>10} "
+                             f"{'-':>10}  {c.error[:40]}")
+                continue
+            lines.append(f"{i:>4}  {c.label:<42} {c.predicted_us:10.1f} "
+                         f"{meas} {c.steps:>6} {c.num_levels:>6} "
+                         f"{c.padded_flops:>12} {c.nnz_T:>8}")
+        return "\n".join(lines)
+
+
+def default_candidates() -> list:
+    """The shipped portfolio: the four strategies plus parameter sweeps over
+    ManualEveryK / ConstrainedAvgLevelCost / CriticalPathRewrite."""
+    return [
+        NoRewrite(),
+        AvgLevelCost(),
+        ManualEveryK(k=5),
+        ManualEveryK(k=10),
+        ManualEveryK(k=20),
+        ConstrainedAvgLevelCost(),                          # a=8, b=64
+        ConstrainedAvgLevelCost(alpha=16, beta=128),
+        ConstrainedAvgLevelCost(alpha=4, beta=32),
+        CriticalPathRewrite(beta=8),
+        CriticalPathRewrite(beta=32),
+    ]
+
+
+class StrategyPortfolio:
+    """Enumerate -> transform -> compile -> score -> rank.
+
+    candidates:     Strategy instances to try (default_candidates() if None).
+    cost_model:     CostModel constants (TPU defaults; CostModel.cpu() for
+                    CPU-engine calibration).
+    chunk/max_deps/dtype: schedule-compiler configuration, forwarded to
+                    schedule_for_transformed.
+    measure_top_k:  if > 0, micro-benchmark the k model-best candidates with
+                    the real scan engine (preamble included) and re-rank
+                    those by measured wall time.
+    measure_iters:  timing repetitions per measured candidate.
+    """
+
+    def __init__(self, candidates=None, cost_model: CostModel | None = None,
+                 chunk: int = 256, max_deps: int = 16, dtype=np.float32,
+                 measure_top_k: int = 0, measure_iters: int = 3):
+        self.candidates = (default_candidates() if candidates is None
+                           else list(candidates))
+        self.cost_model = cost_model if cost_model is not None else CostModel()
+        self.chunk, self.max_deps, self.dtype = chunk, max_deps, dtype
+        self.measure_top_k = measure_top_k
+        self.measure_iters = measure_iters
+
+    def tune(self, L: CSR) -> PortfolioReport:
+        import time
+        from ..solver.schedule import schedule_for_transformed
+        t0 = time.perf_counter()
+        scored: list[PortfolioCandidate] = []
+        failed: list[PortfolioCandidate] = []
+        for strat in self.candidates:
+            label = strategy_label(strat)
+            try:
+                ts = transform(L, strat, validate=False, codegen=False)
+                sched = schedule_for_transformed(
+                    ts, chunk=self.chunk, max_deps=self.max_deps,
+                    dtype=self.dtype)
+            except Exception as e:  # a candidate blowing up must not kill
+                failed.append(PortfolioCandidate(   # the whole tuning run
+                    label=label, predicted_us=float("inf"), breakdown={},
+                    steps=-1, num_levels=-1, padded_flops=-1,
+                    memory_bytes=-1, nnz_T=-1,
+                    error=f"{type(e).__name__}: {e}"))
+                continue
+            bd = self.cost_model.predict(sched, ts.metrics)
+            scored.append(PortfolioCandidate(
+                label=label, predicted_us=bd["total_us"], breakdown=bd,
+                steps=sched.num_steps, num_levels=ts.metrics.num_levels_after,
+                padded_flops=sched.padded_flops(),
+                memory_bytes=sched.memory_bytes(),
+                nnz_T=ts.metrics.nnz_T, metrics=ts.metrics,
+                strategy=strat, ts=ts, sched=sched))
+        if not scored:
+            raise RuntimeError("every portfolio candidate failed: " +
+                               "; ".join(c.error or "" for c in failed))
+        scored.sort(key=lambda c: c.predicted_us)
+        if self.measure_top_k > 0:
+            # re-rank WITHIN the model's top-k by measured wall time; wall
+            # time (CPU us) and model cost (device us) are different scales,
+            # so measured candidates must never be sorted against unmeasured
+            # predictions — the top-k stay ahead of the rest by model rank
+            top = scored[:self.measure_top_k]
+            for c in top:
+                c.measured_us = self._measure(c)
+            top.sort(key=lambda c: c.measured_us)
+            scored = top + scored[self.measure_top_k:]
+        lv_before = scored[0].metrics.num_levels_before
+        report = PortfolioReport(
+            matrix={"n": L.n_rows, "nnz": L.nnz, "levels": lv_before},
+            candidates=scored + failed, cost_model=self.cost_model,
+            measured_top_k=self.measure_top_k,
+            tune_ms=(time.perf_counter() - t0) * 1e3)
+        return report
+
+    def _measure(self, cand: PortfolioCandidate) -> float:
+        """End-to-end per-solve wall time (host preamble + jitted engine)."""
+        import time
+        from ..solver.levelset import solve_scan, to_device
+        import jax
+        import jax.numpy as jnp
+        ds = to_device(cand.sched)
+        fn = jax.jit(lambda cc: solve_scan(ds, cc))
+        b = np.random.default_rng(0).standard_normal(cand.ts.A.n_rows)
+        c = jnp.asarray(cand.ts.preamble(b), dtype=ds.dtype)
+        fn(c).block_until_ready()                      # compile outside timer
+        t0 = time.perf_counter()
+        for _ in range(self.measure_iters):
+            cc = jnp.asarray(cand.ts.preamble(b), dtype=ds.dtype)
+            fn(cc).block_until_ready()
+        return (time.perf_counter() - t0) / self.measure_iters * 1e6

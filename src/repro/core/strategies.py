@@ -13,6 +13,13 @@
 
 All strategies mutate an EquationStore and return per-strategy stats; the
 driver in transform.py assembles the TransformedSystem and metrics.
+
+Naming contract (documented in docs/strategies.md): every strategy class has
+a STABLE `name` (used as the type identity — cache keys, CSV columns, CLI
+specs) and every instance a `label` = name plus a canonical parameter suffix
+(used to tell candidates of one portfolio sweep apart).  For parameter-free
+strategies label == name.  See docs/strategies.md for when the portfolio
+tuner (portfolio.py) prefers each strategy.
 """
 from __future__ import annotations
 
@@ -28,8 +35,13 @@ from .rewrite import EquationStore
 
 __all__ = [
     "Strategy", "NoRewrite", "AvgLevelCost", "ManualEveryK",
-    "ConstrainedAvgLevelCost",
+    "ConstrainedAvgLevelCost", "CriticalPathRewrite", "strategy_label",
 ]
+
+
+def strategy_label(strategy) -> str:
+    """Instance label: stable `name` + canonical parameter suffix."""
+    return getattr(strategy, "label", strategy.name)
 
 
 @dataclasses.dataclass
@@ -120,6 +132,7 @@ class ManualEveryK:
         self.k = k
         self.max_gap = max_gap  # paper: "levels close to each other are
         #                          prioritized to form groups"
+        self.label = f"manual_every_k(k={k},gap={max_gap})"
 
     def apply(self, store: EquationStore, view: GraphView) -> StrategyStats:
         stats = StrategyStats()
@@ -170,6 +183,8 @@ class CriticalPathRewrite:
     def __init__(self, beta: int = 8, alpha: int = 32,
                  max_rounds: int = 10_000):
         self.beta, self.alpha, self.max_rounds = beta, alpha, max_rounds
+        self.label = (f"critical_path(beta={beta},alpha={alpha},"
+                      f"rounds={max_rounds})")
 
     def apply(self, store: EquationStore, view: GraphView) -> StrategyStats:
         stats = StrategyStats()
@@ -218,8 +233,9 @@ class ConstrainedAvgLevelCost:
                  coef_cap: float | None = 1e6, update_avg: bool = False):
         self.alpha, self.beta, self.coef_cap = alpha, beta, coef_cap
         self.update_avg = update_avg
-        self.name = (f"constrained_avg(a={alpha},b={beta},"
-                     f"c={coef_cap:g},dyn={int(update_avg)})")
+        cap = "none" if coef_cap is None else f"{coef_cap:g}"
+        self.label = (f"constrained_avg(a={alpha},b={beta},"
+                      f"c={cap},dyn={int(update_avg)})")
 
     def apply(self, store: EquationStore, view: GraphView) -> StrategyStats:
         stats = StrategyStats()

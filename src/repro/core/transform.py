@@ -20,6 +20,10 @@ Two level assignments are carried:
   * `recomputed` — true dependency levels of A' (never more levels than
     assigned; rows whose deps were fully eliminated drop to level 0).  Used by
     the solver schedule (beyond-paper freebie, flag-selectable).
+
+The full pipeline (EquationStore -> strategy -> transform -> schedule
+compiler -> engines) is documented in docs/architecture.md; per-strategy
+selection guidance lives in docs/strategies.md.
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ from ..sparse.csr import CSR
 from ..sparse.levels import LevelSets, build_levels
 from .graph import GraphView
 from .rewrite import EquationStore
-from .strategies import Strategy, StrategyStats
+from .strategies import Strategy, StrategyStats, strategy_label
 
 __all__ = ["TransformedSystem", "transform", "TransformMetrics"]
 
@@ -156,7 +160,7 @@ def transform(L: CSR, strategy: Strategy, validate: bool = True,
     cb_after = generated_code_bytes(A, None, d, assigned) if codegen else 0
 
     metrics = TransformMetrics(
-        strategy=strategy.name,
+        strategy=strategy_label(strategy),
         num_levels_before=view.num_levels,
         num_levels_after=num_after,
         num_levels_recomputed=int(recomputed.max(initial=-1)) + 1,

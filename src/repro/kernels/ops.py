@@ -14,7 +14,7 @@ import numpy as np
 
 from ..solver.schedule import LevelSchedule
 from ..solver.levelset import to_device
-from .sptrsv_level import sptrsv_groups_pallas
+from .sptrsv_level import sptrsv_groups_pallas, sptrsv_groups_pallas_multi
 from .spmv_ell import spmv_ell_pallas
 from . import ref
 
@@ -27,18 +27,29 @@ def default_interpret() -> bool:
 
 def sptrsv_solve(sched: LevelSchedule, c: np.ndarray,
                  interpret: bool | None = None,
-                 use_ref: bool = False) -> np.ndarray:
-    """Solve a LevelSchedule with the Pallas kernel (or the jnp oracle)."""
+                 use_ref: bool = False, dsched=None) -> np.ndarray:
+    """Solve a LevelSchedule with the Pallas kernel (or the jnp oracle).
+
+    c may be (n,) or batched (n, R) — batched solves run the multi-RHS
+    kernel, streaming the schedule once for all right-hand sides.  Pass a
+    pre-staged DeviceSchedule as `dsched` to skip restaging on repeated
+    solves (the TriangularOperator does).
+    """
     interpret = default_interpret() if interpret is None else interpret
     dtype = sched.dtype
-    c_pad = jnp.concatenate([jnp.asarray(c, dtype=dtype),
-                             jnp.zeros((1,), dtype)])
+    c = jnp.asarray(c, dtype=dtype)
+    tail = (c.shape[1],) if c.ndim == 2 else ()
+    c_pad = jnp.concatenate([c, jnp.zeros((1,) + tail, dtype)], axis=0)
     # the engines' DeviceSchedule staging is the single source of truth for
     # group leaf order (GROUP_LEAVES + carry leaves when present)
-    groups = to_device(sched).groups
+    groups = (dsched if dsched is not None else to_device(sched)).groups
     if use_ref:
         out = ref.sptrsv_levels_grouped_ref(groups, c_pad, n=sched.n,
                                             n_carry=sched.n_carry)
+    elif tail:
+        out = sptrsv_groups_pallas_multi(groups, c_pad, n=sched.n,
+                                         n_carry=sched.n_carry,
+                                         interpret=interpret)
     else:
         out = sptrsv_groups_pallas(groups, c_pad, n=sched.n,
                                    n_carry=sched.n_carry, interpret=interpret)

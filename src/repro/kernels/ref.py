@@ -13,23 +13,30 @@ def sptrsv_levels_grouped_ref(groups, c_pad, n: int, n_carry: int) -> jax.Array:
     `groups` is a tuple of per-group leaf tuples: (row_ids (S, C_g),
     dep_idx (S, C_g, D_g), dep_coef, dinv[, carry_in, carry_out]); groups
     without carry maps hold no partial-row lanes.  c_pad has n+1 entries
-    (last = 0).  Returns x (n,).
+    (last = 0), or shape (n + 1, R) for batched multi-RHS.  Returns x (n,)
+    or (n, R).
     """
     S = groups[0][0].shape[0]
-    x = jnp.zeros((n + 1,), dtype=c_pad.dtype)
-    carry = jnp.zeros((n_carry + 2,), dtype=c_pad.dtype)
+    tail = (c_pad.shape[1],) if c_pad.ndim == 2 else ()
+    x = jnp.zeros((n + 1,) + tail, dtype=c_pad.dtype)
+    carry = jnp.zeros((n_carry + 2,) + tail, dtype=c_pad.dtype)
 
     def body(state, s):
         x, carry = state
         for g in groups:
             row_ids = g[0][s]
-            partial = jnp.sum(g[2][s] * x[g[1][s]], axis=-1)
+            if tail:
+                partial = jnp.einsum("cd,cdr->cr", g[2][s], x[g[1][s]])
+                dinv = g[3][s][:, None]
+            else:
+                partial = jnp.sum(g[2][s] * x[g[1][s]], axis=-1)
+                dinv = g[3][s]
             if len(g) == 6:
                 tot = partial + carry[g[4][s]]
                 carry = carry.at[g[5][s]].set(tot)
             else:
                 tot = partial
-            x = x.at[row_ids].set((c_pad[row_ids] - tot) * g[3][s])
+            x = x.at[row_ids].set((c_pad[row_ids] - tot) * dinv)
         return (x, carry), None
 
     (x, _), _ = jax.lax.scan(body, (x, carry), jnp.arange(S))

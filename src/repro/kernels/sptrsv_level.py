@@ -39,7 +39,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sptrsv_levels_pallas", "sptrsv_groups_pallas"]
+__all__ = ["sptrsv_levels_pallas", "sptrsv_groups_pallas",
+           "sptrsv_groups_pallas_multi"]
 
 
 def _round_up(v: int, m: int) -> int:
@@ -70,9 +71,13 @@ def _make_kernel(group_sizes: tuple):
             idx = g[1][0]                        # (C, D)
             coef = g[2][0]
             dinv = g[3][0]
-            x = x_ref[...]
-            gathered = jnp.take(x, idx, axis=0)
-            partial = jnp.sum(coef * gathered, axis=-1)          # (C,)
+            x = x_ref[...]                       # (n_pad,) or (n_pad, R)
+            gathered = jnp.take(x, idx, axis=0)  # (C, D) or (C, D, R)
+            if x.ndim == 2:                      # batched multi-RHS
+                partial = jnp.einsum("cd,cdr->cr", coef, gathered)
+                dinv = dinv[:, None]
+            else:
+                partial = jnp.sum(coef * gathered, axis=-1)      # (C,)
             if len(g) == 6:
                 carry = carry_ref[...]
                 tot = partial + jnp.take(carry, g[4][0], axis=0)
@@ -138,6 +143,63 @@ def sptrsv_groups_pallas(groups, c_pad, *, n: int, n_carry: int,
         interpret=interpret,
     )(*args, c_full)
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "n_carry", "interpret"))
+def sptrsv_groups_pallas_multi(groups, c_pad, *, n: int, n_carry: int,
+                               interpret: bool = True) -> jax.Array:
+    """Batched multi-RHS variant: c_pad is (n + 1, R), returns x (n, R).
+
+    One kernel invocation amortizes the schedule's HBM traffic over all R
+    right-hand sides (the serving scenario): the ELL tiles stream exactly
+    once, x/carry scratch become (n_pad, R_pad), and the per-lane dot turns
+    into an einsum over the RHS axis.  R is padded to the 8-sublane tile —
+    padding it to a full 128-lane vreg would blow the (n_pad, R_pad) VMEM
+    planes up 16x for the typical R~8 serving batch; real-TPU deployment
+    at larger R would instead tile the RHS axis into 128-wide blocks.
+    """
+    S = groups[0][0].shape[0]
+    dtype = groups[0][2].dtype
+    R = c_pad.shape[1]
+    n_pad = _round_up(n + 1, 128)
+    r_pad = _round_up(R, 8)
+    c_full = jnp.zeros((n_pad, r_pad), dtype)
+    c_full = c_full.at[: n + 1, :R].set(c_pad.astype(dtype))
+
+    step2 = lambda s: (s, 0)        # (S, C) blocks
+    step3 = lambda s: (s, 0, 0)     # (S, C, D) blocks
+    whole2 = lambda s: (0, 0)       # VMEM-resident (n_pad, R_pad) planes
+
+    in_specs = []
+    args = []
+    group_sizes = []
+    for g in groups:
+        C = g[0].shape[1]
+        D = g[1].shape[2]
+        in_specs += [pl.BlockSpec((1, C), step2),       # row_ids
+                     pl.BlockSpec((1, C, D), step3),    # dep_idx
+                     pl.BlockSpec((1, C, D), step3),    # dep_coef
+                     pl.BlockSpec((1, C), step2)]       # dinv
+        args += [g[0], g[1], g[2].astype(dtype), g[3].astype(dtype)]
+        if len(g) == 6:
+            in_specs += [pl.BlockSpec((1, C), step2)] * 2
+            args += [g[4], g[5]]
+        group_sizes.append(len(g))
+    in_specs.append(pl.BlockSpec((n_pad, r_pad), whole2))   # c_pad
+
+    out = pl.pallas_call(
+        _make_kernel(tuple(group_sizes)),
+        grid=(S,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((n_pad, r_pad), whole2),
+        out_shape=jax.ShapeDtypeStruct((n_pad, r_pad), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((n_pad, r_pad), dtype),               # x
+            pltpu.VMEM((_round_up(n_carry + 2, 128), r_pad), dtype),
+        ],
+        interpret=interpret,
+    )(*args, c_full)
+    return out[:n, :R]
 
 
 def sptrsv_levels_pallas(row_ids, dep_idx, dep_coef, dinv, carry_in,

@@ -2,7 +2,10 @@ from .reference import solve_csr_seq, solve_transformed_seq, solve_dense
 from .schedule import (LevelSchedule, WidthGroup, build_schedule,
                        schedule_for_csr, schedule_for_preamble,
                        schedule_for_transformed, validate_schedule)
-from .levelset import DeviceSchedule, to_device, solve_scan, solve_unrolled, solve
+from .levelset import (DeviceSchedule, to_device, solve_scan, solve_unrolled,
+                       solve)
+from .operator import (TriangularOperator, OperatorStats, matrix_fingerprint,
+                       default_cache_dir)
 from . import distributed
 
 __all__ = [
@@ -10,5 +13,7 @@ __all__ = [
     "LevelSchedule", "WidthGroup", "build_schedule", "schedule_for_csr",
     "schedule_for_preamble", "schedule_for_transformed", "validate_schedule",
     "DeviceSchedule", "to_device", "solve_scan", "solve_unrolled", "solve",
+    "TriangularOperator", "OperatorStats", "matrix_fingerprint",
+    "default_cache_dir",
     "distributed",
 ]

@@ -2,6 +2,9 @@
 
 DESIGN — the schedule-compiler pipeline
 =======================================
+(How this layer fits the transform -> compile -> engines -> operator stack
+is documented in docs/architecture.md.)
+
 The paper's testbed compiles a matrix into specialized C code; our TPU-native
 analogue compiles it into a *static ELL schedule*: a sequence of fixed-shape
 steps executed in order, with all cross-step dependencies resolved at compile

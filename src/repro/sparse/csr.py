@@ -75,9 +75,13 @@ class CSR:
         return d
 
     def matvec(self, x: np.ndarray) -> np.ndarray:
+        """y = A @ x for x of shape (n_cols,) or batched (n_cols, k)."""
         rows = np.repeat(np.arange(self.n_rows), self.row_nnz())
-        prod = self.data * x[self.indices]
-        out = np.zeros(self.n_rows, dtype=np.result_type(self.data, x))
+        gathered = x[self.indices]
+        prod = (self.data * gathered if gathered.ndim == 1
+                else self.data[:, None] * gathered)
+        out = np.zeros((self.n_rows,) + x.shape[1:],
+                       dtype=np.result_type(self.data, x))
         np.add.at(out, rows, prod)
         return out
 

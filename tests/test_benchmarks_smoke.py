@@ -25,6 +25,47 @@ def test_run_smoke_emits_bench_schedule(tmp_path):
 
 
 @pytest.mark.bench
+def test_operator_bench_emits_table(tmp_path):
+    """BENCH_operator.json: tuner-vs-fixed table with the never-slower-than-
+    worst guarantee (ISSUE 2 acceptance criterion)."""
+    from benchmarks import operator_bench as ob
+
+    out = tmp_path / "BENCH_operator.json"
+    rec = ob.run(out_path=str(out), scales=(0.03, 0.03), iters=2,
+                 measure_top_k=0)
+    assert out.exists()
+    assert json.loads(out.read_text()) == rec
+    for m in rec["matrices"].values():
+        assert len(m["fixed"]) == 4
+        assert m["tuner"]["pick"]
+        assert m["tuner"]["report"]["candidates"]
+        assert m["worst_fixed_us"] >= m["best_fixed_us"] > 0
+        assert m["tuner"]["measured_us"] > 0
+        # no wall-clock comparisons at this tiny smoke scale — single-
+        # digit-ms timings flake on shared runners; the tuner guarantee
+        # is held to the strict flag on the committed full-scale artifact
+        # (test below)
+
+
+@pytest.mark.bench
+def test_committed_operator_artifact_guarantee():
+    """The committed experiments/BENCH_operator.json upholds the ISSUE 2
+    acceptance criterion: the tuner's pick is never slower than the worst
+    fixed strategy on either analogue."""
+    from pathlib import Path
+
+    src = Path("experiments/BENCH_operator.json")
+    assert src.exists(), "run benchmarks.operator_bench to regenerate"
+    data = json.loads(src.read_text())
+    assert set(data["matrices"]) >= {
+        f"lung2_like@{data['config']['scales'][0]}",
+        f"torso2_like@{data['config']['scales'][1]}"}
+    for m in data["matrices"].values():
+        assert m["tuner_not_slower_than_worst"]
+        assert m["tuner"]["measured_us"] <= m["worst_fixed_us"]
+
+
+@pytest.mark.bench
 def test_bench_schedule_fields(tmp_path):
     """BENCH_schedule.json carries the perf-trajectory fields."""
     from benchmarks.run import bench_schedule

@@ -1,0 +1,174 @@
+"""TriangularOperator: accuracy (1-D + batched), fingerprint cache
+round-trips, engines, stats (ISSUE 2 tentpole)."""
+import numpy as np
+import pytest
+
+from repro.solver import (TriangularOperator, matrix_fingerprint,
+                          solve_csr_seq)
+from repro.sparse import generators
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memory_cache():
+    TriangularOperator.clear_memory_cache()
+    yield
+    TriangularOperator.clear_memory_cache()
+
+
+@pytest.fixture(scope="module")
+def lung_small():
+    return generators.lung2_like(scale=0.04)
+
+
+def _rel_err(x, x_ref):
+    return np.abs(x - x_ref).max() / max(1.0, np.abs(x_ref).max())
+
+
+def test_auto_operator_1d_and_batched(lung_small, tmp_path):
+    """The acceptance path: from_csr(L, tune='auto').solve(B) for 1-D and
+    (n, k) RHS, matching the sequential reference to 1e-8."""
+    L = lung_small
+    op = TriangularOperator.from_csr(L, tune="auto", chunk=128, max_deps=8,
+                                     cache_dir=tmp_path)
+    assert op.report is not None and op.report.best.label == op.strategy
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    x = op.solve(b)
+    x_ref = solve_csr_seq(L, b)
+    assert x.shape == (L.n_rows,)
+    assert _rel_err(x, x_ref) < 1e-8
+    B = np.random.default_rng(1).standard_normal((L.n_rows, 6))
+    X = op.solve(B)
+    assert X.shape == (L.n_rows, 6)
+    for j in range(6):      # batched == column-by-column reference
+        assert _rel_err(X[:, j], solve_csr_seq(L, B[:, j])) < 1e-8
+
+
+def test_cache_roundtrip(lung_small, tmp_path):
+    L = lung_small
+    op1 = TriangularOperator.from_csr(L, tune="avgLevelCost", chunk=128,
+                                      max_deps=8, cache_dir=tmp_path)
+    assert op1.stats.cache_source == "built"
+    assert list(tmp_path.glob("op-*.pkl"))          # persisted
+    # warm memory cache
+    op2 = TriangularOperator.from_csr(L, tune="avgLevelCost", chunk=128,
+                                      max_deps=8, cache_dir=tmp_path)
+    assert op2.stats.cache_source == "memory"
+    # cold process (memory cleared) -> disk hit, identical artifact
+    TriangularOperator.clear_memory_cache()
+    op3 = TriangularOperator.from_csr(L, tune="avgLevelCost", chunk=128,
+                                      max_deps=8, cache_dir=tmp_path)
+    assert op3.stats.cache_source == "disk"
+    assert op3.strategy == op1.strategy
+    assert op3.schedule.num_steps == op1.schedule.num_steps
+    b = np.random.default_rng(2).standard_normal(L.n_rows)
+    assert _rel_err(op3.solve(b), solve_csr_seq(L, b)) < 1e-8
+    # different configuration -> different key -> rebuild
+    op4 = TriangularOperator.from_csr(L, tune="avgLevelCost", chunk=64,
+                                      max_deps=8, cache_dir=tmp_path)
+    assert op4.stats.cache_source == "built"
+
+
+def test_cache_auto_report_survives_disk(lung_small, tmp_path):
+    L = lung_small
+    op1 = TriangularOperator.from_csr(L, tune="auto", chunk=128, max_deps=8,
+                                      cache_dir=tmp_path)
+    TriangularOperator.clear_memory_cache()
+    op2 = TriangularOperator.from_csr(L, tune="auto", chunk=128, max_deps=8,
+                                      cache_dir=tmp_path)
+    assert op2.stats.cache_source == "disk"
+    assert op2.strategy == op1.strategy
+    # the slim ranked report rides along in the cached artifact
+    assert [c.label for c in op2.report.candidates] == \
+        [c.label for c in op1.report.candidates]
+
+
+def test_cache_disabled_writes_nothing(lung_small, tmp_path):
+    TriangularOperator.from_csr(lung_small, tune="no_rewriting", chunk=128,
+                                max_deps=8, cache=False, cache_dir=tmp_path)
+    assert not list(tmp_path.iterdir())
+    assert not TriangularOperator._memory_cache
+
+
+def test_memory_cache_is_lru_bounded(tmp_path):
+    old = TriangularOperator._memory_cache_max
+    TriangularOperator._memory_cache_max = 2
+    try:
+        for seed in range(3):
+            L = generators.random_lower(60, avg_offdiag=2.0, seed=seed,
+                                        max_back=10)
+            TriangularOperator.from_csr(L, tune="no_rewriting", chunk=16,
+                                        max_deps=4, cache_dir=tmp_path)
+        assert len(TriangularOperator._memory_cache) == 2
+        assert len(list(tmp_path.glob("op-*.pkl"))) == 3    # disk keeps all
+    finally:
+        TriangularOperator._memory_cache_max = old
+
+
+def test_cost_model_is_part_of_cache_key(lung_small, tmp_path):
+    from repro.core import TuningCostModel
+    op1 = TriangularOperator.from_csr(lung_small, tune="auto", chunk=128,
+                                      max_deps=8, cache_dir=tmp_path)
+    op2 = TriangularOperator.from_csr(lung_small, tune="auto", chunk=128,
+                                      max_deps=8, cache_dir=tmp_path,
+                                      cost_model=TuningCostModel.cpu())
+    assert op1.stats.cache_source == "built"
+    assert op2.stats.cache_source == "built"    # distinct key, no collision
+    assert len(list(tmp_path.glob("op-*.pkl"))) == 2
+
+
+def test_fingerprint_sensitivity(lung_small):
+    L = lung_small
+    fp = matrix_fingerprint(L)
+    assert fp == matrix_fingerprint(L)
+    revalued = generators.with_values(L, seed=99)
+    assert matrix_fingerprint(revalued) != fp                  # values count
+    assert matrix_fingerprint(revalued, include_values=False) == \
+        matrix_fingerprint(L, include_values=False)            # pattern only
+    other = generators.random_lower(L.n_rows, avg_offdiag=2.0, seed=1)
+    assert matrix_fingerprint(other, include_values=False) != \
+        matrix_fingerprint(L, include_values=False)
+
+
+def test_engines_match(tmp_path):
+    L = generators.banded(80, 12, seed=1)      # splits rows -> carry lanes
+    b = np.random.default_rng(3).standard_normal(L.n_rows)
+    x_ref = solve_csr_seq(L, b)
+    op = TriangularOperator.from_csr(L, tune="no_rewriting", chunk=16,
+                                     max_deps=4, cache=False)
+    for engine in ("scan", "unrolled", "pallas"):
+        assert _rel_err(op.solve(b, engine=engine), x_ref) < 1e-8, engine
+    B = np.random.default_rng(4).standard_normal((L.n_rows, 3))
+    X = op.solve(B, engine="pallas")           # batched Pallas path
+    for j in range(3):
+        assert _rel_err(X[:, j], solve_csr_seq(L, B[:, j])) < 1e-8
+
+
+def test_solve_stats_and_validation(lung_small, tmp_path):
+    L = lung_small
+    op = TriangularOperator.from_csr(L, tune="constrained_avg", chunk=128,
+                                     max_deps=8, cache=False)
+    b = np.random.default_rng(5).standard_normal(L.n_rows)
+    op.solve(b)
+    op.solve(np.tile(b[:, None], (1, 4)))
+    st = op.stats
+    assert st.solves == 2 and st.rhs_columns == 5
+    assert st.total_solve_ms >= st.last_solve_ms > 0
+    assert st.last_residual < 1e-10
+    with pytest.raises(ValueError, match="b must be"):
+        op.solve(np.zeros(L.n_rows + 1))
+    with pytest.raises(ValueError, match="b must be"):
+        op.solve(np.zeros((L.n_rows, 2, 2)))
+
+
+def test_no_refine_is_device_precision(lung_small):
+    """max_refine=0 returns the raw float32 device solve (~1e-5), while the
+    default refinement buys back float64 (~1e-10) — the contract the
+    operator's accuracy guarantee rests on."""
+    L = lung_small
+    op = TriangularOperator.from_csr(L, tune="avgLevelCost", chunk=128,
+                                     max_deps=8, cache=False)
+    b = np.random.default_rng(6).standard_normal(L.n_rows)
+    x_ref = solve_csr_seq(L, b)
+    raw = _rel_err(op.solve(b, max_refine=0), x_ref)
+    refined = _rel_err(op.solve(b), x_ref)
+    assert refined < 1e-8 < raw < 1e-3

@@ -1,0 +1,159 @@
+"""Strategy-portfolio auto-tuner: naming contract, cost-model ranking
+determinism, measured-mode agreement (ISSUE 2 tentpole)."""
+import numpy as np
+import pytest
+
+from repro.core import (AvgLevelCost, ConstrainedAvgLevelCost,
+                        CriticalPathRewrite, ManualEveryK, NoRewrite,
+                        StrategyPortfolio, TuningCostModel,
+                        default_candidates, make_strategy, strategy_label,
+                        transform)
+from repro.sparse import generators
+
+
+@pytest.fixture(scope="module")
+def lung_small():
+    return generators.lung2_like(scale=0.03)
+
+
+# -- naming contract (ISSUE satellite: stable names + __all__) ----------------
+
+def test_stable_names_and_labels():
+    assert NoRewrite.name == "no_rewriting"
+    assert AvgLevelCost.name == "avgLevelCost"
+    assert ManualEveryK.name == "manual_every_k"
+    assert ConstrainedAvgLevelCost.name == "constrained_avg"
+    assert CriticalPathRewrite.name == "critical_path"
+    # instance labels: stable name + canonical parameter suffix
+    assert strategy_label(NoRewrite()) == "no_rewriting"
+    assert strategy_label(ManualEveryK(k=7)) == "manual_every_k(k=7,gap=1)"
+    assert strategy_label(CriticalPathRewrite(beta=4)) == \
+        "critical_path(beta=4,alpha=32,rounds=10000)"
+    s = ConstrainedAvgLevelCost(alpha=4, beta=32, coef_cap=None)
+    assert s.name == "constrained_avg"
+    assert strategy_label(s) == "constrained_avg(a=4,b=32,c=none,dyn=0)"
+    # label.split("(")[0] always recovers the stable name (CSV consumers)
+    for strat in default_candidates():
+        assert strategy_label(strat).split("(")[0] == strat.name
+
+
+def test_critical_path_exported():
+    import repro.core.strategies as S
+    assert "CriticalPathRewrite" in S.__all__
+    from repro.core import CriticalPathRewrite as CP
+    assert CP is S.CriticalPathRewrite
+
+
+def test_metrics_strategy_carries_label():
+    L = generators.random_lower(80, avg_offdiag=2.0, seed=0, max_back=10)
+    ts = transform(L, ManualEveryK(k=5), validate=False, codegen=False)
+    assert ts.metrics.strategy == "manual_every_k(k=5,gap=1)"
+
+
+def test_make_strategy():
+    assert isinstance(make_strategy("no_rewriting"), NoRewrite)
+    assert isinstance(make_strategy("avgLevelCost"), AvgLevelCost)
+    s = ManualEveryK(k=3)
+    assert make_strategy(s) is s
+    with pytest.raises(ValueError, match="unknown strategy"):
+        make_strategy("bogus")
+    with pytest.raises(TypeError):
+        make_strategy(42)
+
+
+# -- cost-model ranking -------------------------------------------------------
+
+def test_ranking_deterministic(lung_small):
+    port = StrategyPortfolio(chunk=128, max_deps=8)
+    r1 = port.tune(lung_small)
+    r2 = StrategyPortfolio(chunk=128, max_deps=8).tune(lung_small)
+    assert [c.label for c in r1.candidates] == \
+        [c.label for c in r2.candidates]
+    assert [c.predicted_us for c in r1.candidates] == \
+        [c.predicted_us for c in r2.candidates]
+    # ranked ascending by predicted cost
+    preds = [c.predicted_us for c in r1.candidates if c.error is None]
+    assert preds == sorted(preds)
+
+
+def test_cost_model_prefers_transform_on_thin_levels(lung_small):
+    """lung2's 453 two-row levels are the paper's motivating case: any
+    sensible cost model must rank the untransformed baseline last-ish."""
+    rep = StrategyPortfolio(chunk=128, max_deps=8).tune(lung_small)
+    assert rep.best.label != "no_rewriting"
+    by_label = {c.label: c for c in rep.candidates}
+    assert by_label["no_rewriting"].predicted_us > rep.best.predicted_us
+    # the pick also compiled to fewer steps than the baseline
+    assert rep.best.steps < by_label["no_rewriting"].steps
+
+
+def test_cost_model_breakdown_fields(lung_small):
+    rep = StrategyPortfolio(chunk=128, max_deps=8).tune(lung_small)
+    for c in rep.candidates:
+        if c.error is not None:
+            continue
+        bd = c.breakdown
+        assert set(bd) == {"steps_us", "flops_us", "bytes_us",
+                           "preamble_us", "total_us"}
+        assert bd["total_us"] == pytest.approx(
+            bd["steps_us"] + bd["flops_us"] + bd["bytes_us"]
+            + bd["preamble_us"])
+        assert c.predicted_us == bd["total_us"]
+    # nnz_T charge: no_rewriting pays zero preamble
+    nr = next(c for c in rep.candidates if c.label == "no_rewriting")
+    assert nr.breakdown["preamble_us"] == 0.0 and nr.nnz_T == 0
+
+
+def test_report_serializes(lung_small):
+    import json
+    rep = StrategyPortfolio(chunk=128, max_deps=8).tune(lung_small)
+    d = rep.to_dict()
+    json.dumps(d)       # JSON-clean
+    assert d["matrix"]["n"] == lung_small.n_rows
+    assert d["candidates"][0]["rank"] == 0
+    table = rep.table()
+    for c in rep.candidates:
+        assert c.label in table
+    slim = rep.slim()
+    assert slim.best.ts is None and slim.best.sched is None
+    assert slim.best.label == rep.best.label
+
+
+def test_failed_candidate_is_reported_not_fatal(lung_small):
+    class Exploding:
+        name = "exploding"
+
+        def apply(self, store, view):
+            raise RuntimeError("boom")
+
+    rep = StrategyPortfolio(candidates=[NoRewrite(), Exploding()],
+                            chunk=128, max_deps=8).tune(lung_small)
+    assert rep.best.label == "no_rewriting"
+    failed = [c for c in rep.candidates if c.error is not None]
+    assert len(failed) == 1 and "boom" in failed[0].error
+    assert "FAILED" in rep.table()
+    import json
+    json.dumps(rep.to_dict(), allow_nan=False)      # strict-JSON clean
+
+
+# -- measured mode ------------------------------------------------------------
+
+@pytest.mark.slow
+def test_measured_mode_agrees_with_cost_ordering():
+    """On both synthetic analogues, the tuner's pick (model- or
+    measurement-ranked) must beat the measured no_rewriting baseline — the
+    relaxed 'cost model agrees with measured ordering' contract that stays
+    robust to CI timing noise."""
+    cands = [NoRewrite(), AvgLevelCost(), ManualEveryK(k=10)]
+    for L in (generators.lung2_like(scale=0.03),
+              generators.torso2_like(scale=0.03)):
+        port = StrategyPortfolio(candidates=cands, chunk=128, max_deps=8,
+                                 measure_top_k=3, measure_iters=2)
+        rep = port.tune(L)
+        measured = {c.label: c.measured_us for c in rep.candidates
+                    if c.measured_us is not None}
+        assert len(measured) == 3
+        assert rep.best.measured_us == min(measured.values())
+        # the model-worst candidate on thin-level matrices is the baseline;
+        # the pick must not be slower than it (acceptance criterion)
+        assert rep.best.measured_us <= measured["no_rewriting"]

@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links.
+
+    python tools/check_links.py README.md docs
+
+Arguments are markdown files and/or directories (scanned for *.md).  Checks
+every inline link/image target that is not external (http/https/mailto) or
+a pure in-page anchor: the referenced path, resolved relative to the file
+containing the link, must exist.  Exit code 1 lists the broken links.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline markdown links [text](target) / images ![alt](target); stops at
+# the first ')' so title suffixes ("target "title"") are tolerated
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_md_files(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        else:
+            files.append(p)
+    return files
+
+
+def check_file(md: Path) -> list[str]:
+    broken = []
+    text = md.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                broken.append(f"{md}:{lineno}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    files = iter_md_files(argv)
+    missing = [str(f) for f in files if not f.exists()]
+    if missing:
+        print("no such file(s): " + ", ".join(missing))
+        return 2
+    broken = [b for f in files for b in check_file(f)]
+    for b in broken:
+        print(b)
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not broken else f'{len(broken)} broken link(s)'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
