@@ -41,14 +41,16 @@ def _solve_us(op: TriangularOperator, b: np.ndarray, iters: int) -> float:
 
 
 def bench_matrix(L, chunk: int = 256, max_deps: int = 16, iters: int = 3,
-                 rhs_batch: int = 8, measure_top_k: int = 3) -> dict:
+                 rhs_batch: int = 8, measure_top_k: int = 3,
+                 engine=None) -> dict:
     rng = np.random.default_rng(0)
     b = rng.standard_normal(L.n_rows)
     B = rng.standard_normal((L.n_rows, rhs_batch))
     fixed = {}
     for strat in fixed_strategies():
         op = TriangularOperator.from_csr(L, tune=strat, chunk=chunk,
-                                         max_deps=max_deps, cache=False)
+                                         max_deps=max_deps, cache=False,
+                                         engine=engine)
         fixed[strategy_label(strat)] = {
             "measured_us": round(_solve_us(op, b, iters), 1),
             "batched_us": round(_solve_us(op, B, iters), 1),
@@ -57,7 +59,8 @@ def bench_matrix(L, chunk: int = 256, max_deps: int = 16, iters: int = 3,
         }
     op = TriangularOperator.from_csr(L, tune="auto", chunk=chunk,
                                      max_deps=max_deps, cache=False,
-                                     measure_top_k=measure_top_k)
+                                     measure_top_k=measure_top_k,
+                                     engine=engine)
     tuner_us = round(_solve_us(op, b, iters), 1)
     worst = max(v["measured_us"] for v in fixed.values())
     best = min(v["measured_us"] for v in fixed.values())
@@ -79,18 +82,21 @@ def bench_matrix(L, chunk: int = 256, max_deps: int = 16, iters: int = 3,
 
 def run(out_path="experiments/BENCH_operator.json", scales=(0.1, 0.08),
         iters: int = 3, chunk: int = 256, max_deps: int = 16,
-        rhs_batch: int = 8, measure_top_k: int = 3) -> dict:
+        rhs_batch: int = 8, measure_top_k: int = 3, engine=None) -> dict:
+    from repro.solver import resolve_engine
     record = {
         "config": {"chunk": chunk, "max_deps": max_deps,
                    "scales": list(scales), "iters": iters,
-                   "rhs_batch": rhs_batch, "measure_top_k": measure_top_k},
+                   "rhs_batch": rhs_batch, "measure_top_k": measure_top_k,
+                   "engine": resolve_engine(engine).name},
         "matrices": {},
     }
     for name, L in (
             (f"lung2_like@{scales[0]}", generators.lung2_like(scales[0])),
             (f"torso2_like@{scales[1]}", generators.torso2_like(scales[1]))):
         m = bench_matrix(L, chunk=chunk, max_deps=max_deps, iters=iters,
-                         rhs_batch=rhs_batch, measure_top_k=measure_top_k)
+                         rhs_batch=rhs_batch, measure_top_k=measure_top_k,
+                         engine=engine)
         record["matrices"][name] = m
         print(f"{name}: tuner pick = {m['tuner']['pick']} "
               f"({m['tuner']['measured_us']}us, batched x{rhs_batch} "

@@ -4,6 +4,8 @@
     PYTHONPATH=src python -m benchmarks.run --smoke    # reduced-scale CI run
 
 Sections:
+  engines         — capability smoke: every available registered engine
+                    solves one system through the registry (smoke only)
   table1          — paper Table I (strategy comparison, lung2/torso2)
   level_profiles  — paper Fig. 5/6 (per-level cost profiles)
   solver_bench    — solve wall time (CPU measured + TPU roofline model)
@@ -49,6 +51,40 @@ def bench_schedule(out_path="experiments/BENCH_schedule.json",
     return record
 
 
+def engine_capability_smoke(n: int = 200) -> dict:
+    """Solve one small system through every *available* registered engine
+    (registry dispatch, pallas-interpret included) and check it against the
+    sequential reference — the CI engine-capability gate."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.solver import (available_engines, engine_capabilities,
+                              resolve_engine, schedule_for_csr,
+                              solve_csr_seq, to_device)
+    from repro.sparse import build_levels, generators
+
+    L = generators.random_lower(n, avg_offdiag=2.5, seed=0, max_back=25)
+    sched = schedule_for_csr(L, build_levels(L), chunk=64, max_deps=8)
+    ds = to_device(sched)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(n)
+    B = rng.standard_normal((n, 3))
+    x_ref = solve_csr_seq(L, b)
+    out = {"capabilities": engine_capabilities(), "rel_err": {}}
+    for name in available_engines():
+        eng = resolve_engine(name)
+        fn = eng.compile(ds)
+        x = np.asarray(fn(jnp.asarray(b, ds.dtype)))
+        err = float(np.abs(x - x_ref).max() / max(1.0, np.abs(x_ref).max()))
+        assert err < 2e-4, f"engine {name}: rel err {err:.2e}"
+        if eng.supports_batched_rhs:
+            X = np.asarray(fn(jnp.asarray(B, ds.dtype)))
+            assert X.shape == (n, 3), f"engine {name}: batched shape"
+        out["rel_err"][name] = err
+        print(f"engine {name:<18} rel_err={err:.2e} "
+              f"{eng.capabilities()}")
+    return out
+
+
 def smoke(out_path=None, operator_out=None) -> dict:
     """Reduced-scale pass over every benchmark driver (tier-1 smoke)."""
     import benchmarks.level_profiles as lp
@@ -58,6 +94,7 @@ def smoke(out_path=None, operator_out=None) -> dict:
     from repro.sparse import generators
     from repro.sparse import io as sio
 
+    engines = engine_capability_smoke()
     real_load = sio.load_named
     try:
         sio.load_named = lambda name: (
@@ -70,11 +107,25 @@ def smoke(out_path=None, operator_out=None) -> dict:
         sio.load_named = real_load
     ob.run(out_path=operator_out, scales=(0.04, 0.04), iters=1,
            measure_top_k=0)
-    return bench_schedule(out_path, scales=(0.08, 0.06), reps=2,
-                          time_solve=False)
+    rec = bench_schedule(None, scales=(0.08, 0.06), reps=2,
+                         time_solve=False)
+    rec["engines"] = engines
+    if out_path:        # persist WITH the engine section (record == file)
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(rec, indent=2) + "\n")
+    return rec
 
 
 def main() -> None:
+    import os
+    if os.environ.get("REPRO_STRICT_DEPRECATIONS") == "1":
+        # CI gate: DeprecationWarnings issued from repro's own modules are
+        # errors (the string-engine shims must not regress into internal
+        # use).  Regex module match — PYTHONWARNINGS can't prefix-match.
+        import warnings
+        warnings.filterwarnings("error", category=DeprecationWarning,
+                                module=r"repro\..*")
     if "--smoke" in sys.argv:
         t0 = time.time()
         rec = smoke()

@@ -23,9 +23,8 @@ import numpy as np
 
 from repro.core import AvgLevelCost, ConstrainedAvgLevelCost, NoRewrite, \
     transform
-from repro.solver import build_schedule, schedule_for_csr, \
+from repro.solver import build_schedule, resolve_engine, schedule_for_csr, \
     schedule_for_transformed, solve, to_device
-from repro.solver.levelset import solve_scan
 from repro.sparse import build_levels, generators
 from repro.sparse import io as sio
 from repro.sparse.csr import tril
@@ -102,11 +101,10 @@ def legacy_build_ms(A, diag, level_of, chunk=256, max_deps=16,
     return (time.perf_counter() - t0) * 1e3
 
 
-def _solve_us(sched, b, iters=3) -> float:
-    import jax
+def _solve_us(sched, b, iters=3, engine=None) -> float:
     import jax.numpy as jnp
     ds = to_device(sched)
-    fn = jax.jit(lambda cc: solve_scan(ds, cc))
+    fn = resolve_engine(engine).compile(ds)
     cc = jnp.asarray(b, dtype=ds.dtype)
     fn(cc).block_until_ready()
     t0 = time.perf_counter()
@@ -161,19 +159,19 @@ def schedule_metrics(L, chunk=256, max_deps=16, reps=5,
 
 
 def bench_one(L, name: str, scale_note: str, chunk=256, max_deps=16,
-              iters=5):
-    import jax
+              iters=5, engine=None):
     import jax.numpy as jnp
     b = np.random.default_rng(0).standard_normal(L.n_rows)
     rows = []
     base_us = None
+    eng = resolve_engine(engine)
     for strat in (NoRewrite(), AvgLevelCost(),
                   ConstrainedAvgLevelCost(alpha=12, beta=64, coef_cap=1e8)):
         ts = transform(L, strat, validate=False, codegen=False)
         sched = schedule_for_transformed(ts, chunk=chunk, max_deps=max_deps)
         c = ts.preamble(b).astype(np.float32)
         ds = to_device(sched)
-        fn = jax.jit(lambda cc: solve_scan(ds, cc))
+        fn = eng.compile(ds)
         cc = jnp.asarray(c)
         fn(cc).block_until_ready()
         t0 = time.perf_counter()

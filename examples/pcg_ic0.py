@@ -1,15 +1,18 @@
 """Preconditioned CG with an IC(0)-style triangular preconditioner whose
 solves go through the transformed SpTRSV operator — the paper's §I
 motivation ("building block to preconditioners for sparse iterative
-solvers") end to end.
+solvers") end to end.  Both halves of M^-1 = (L L^T)^-1 run through the
+level-scheduled engines: the forward L-sweep via the transformed schedule,
+the backward L^T-sweep via the transpose operator
+(TriangularOperator.from_csr(..., transpose=True)).
 
     PYTHONPATH=src python examples/pcg_ic0.py
 """
 import numpy as np
 
 from repro.core import AvgLevelCost, NoRewrite, transform
-from repro.solver import schedule_for_transformed, to_device
-from repro.solver.levelset import solve_scan
+from repro.solver import (TriangularOperator, resolve_engine,
+                          schedule_for_transformed, to_device)
 from repro.sparse import generators
 from repro.sparse.csr import CSR, from_coo
 
@@ -25,21 +28,23 @@ def spd_from_grid(nx: int, ny: int, seed=0):
 
 def pcg(A, b, Lfac, ts, iters=80, tol=1e-8):
     """CG on Ax=b, preconditioner M^-1 = (L L^T)^-1 via two triangular
-    solves; the forward solve uses the transformed level-scheduled engine."""
+    solves — the forward sweep through the transformed level-scheduled
+    engine, the backward L^T sweep through the transpose operator (same
+    compiler and engines), both compiled once outside the loop."""
     import jax.numpy as jnp
-    import jax
-    import scipy.linalg
 
     sched = schedule_for_transformed(ts, chunk=128, max_deps=8,
                                      dtype=np.float64)
     ds = to_device(sched)
-    fwd = jax.jit(lambda c: solve_scan(ds, c))
-    dense_L = Lfac.to_dense()
+    fwd = resolve_engine("scan").compile(ds)
+    bwd = TriangularOperator.from_csr(Lfac, tune="no_rewriting",
+                                      transpose=True, chunk=128, max_deps=8,
+                                      cache=False)
 
     def apply_minv(r):
         c = ts.preamble(r)
         y = np.asarray(fwd(jnp.asarray(c, jnp.float32))).astype(np.float64)
-        return scipy.linalg.solve_triangular(dense_L.T, y, lower=False)
+        return bwd.solve(y)
 
     x = np.zeros_like(b)
     r = b - A @ x

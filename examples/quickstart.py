@@ -40,10 +40,33 @@ def main():
             for j in range(B.shape[1])]
     print(f"batched (n, 8): max err {max(errs):.2e}")
 
-    # 5. the same solve through the Pallas TPU kernel (interpret mode on CPU)
-    x2 = op.solve(b, engine="pallas")
+    # 5. the same solve through the Pallas TPU kernel (interpret mode on
+    #    CPU) — engines resolve through the repro.solver.engines registry
+    from repro.solver import resolve_engine
+    x2 = op.solve(b, engine=resolve_engine("pallas"))
     print(f"pallas engine: max err {np.abs(x2 - x_ref).max():.2e}")
     print(f"\nper-solve stats: {op.stats.to_dict()}")
+
+    # 6. ILU-style forward/backward pair: solve L y = b then L^T z = y —
+    #    the transpose operator reuses the same compiler/engines (and the
+    #    same disk cache) by solving the reversed-transposed lower system
+    op_t = TriangularOperator.from_csr(L, tune="auto", chunk=128, max_deps=8,
+                                       transpose=True)
+    y = op.solve(b)
+    z = op_t.solve(y)
+    z_ref = np.linalg.solve(L.to_dense().T, solve_csr_seq(L, b))
+    print(f"\nL then L^T round-trip: max err {np.abs(z - z_ref).max():.2e}")
+
+    # 7. differentiable solves: sptrsv routes jax arrays through a
+    #    custom_vjp whose backward pass is the transpose operator itself
+    import jax
+    import jax.numpy as jnp
+    from repro.solver import sptrsv
+    g = jax.grad(lambda bb: jnp.sum(sptrsv(L, bb)))(jnp.asarray(b,
+                                                                jnp.float32))
+    g_ref = np.linalg.solve(L.to_dense().T, np.ones(L.n_rows))   # L^-T 1
+    print(f"jax.grad through sptrsv: max err "
+          f"{np.abs(np.asarray(g) - g_ref).max():.2e}")
 
 
 if __name__ == "__main__":

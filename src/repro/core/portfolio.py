@@ -210,20 +210,25 @@ class StrategyPortfolio:
     chunk/max_deps/dtype: schedule-compiler configuration, forwarded to
                     schedule_for_transformed.
     measure_top_k:  if > 0, micro-benchmark the k model-best candidates with
-                    the real scan engine (preamble included) and re-rank
-                    those by measured wall time.
+                    the real engine (preamble included) and re-rank those
+                    by measured wall time.
     measure_iters:  timing repetitions per measured candidate.
+    engine:         engine used by the measured mode — a registered name,
+                    an Engine from repro.solver.engines, or None for the
+                    default scan engine (resolved through the registry).
     """
 
     def __init__(self, candidates=None, cost_model: CostModel | None = None,
                  chunk: int = 256, max_deps: int = 16, dtype=np.float32,
-                 measure_top_k: int = 0, measure_iters: int = 3):
+                 measure_top_k: int = 0, measure_iters: int = 3,
+                 engine=None):
         self.candidates = (default_candidates() if candidates is None
                            else list(candidates))
         self.cost_model = cost_model if cost_model is not None else CostModel()
         self.chunk, self.max_deps, self.dtype = chunk, max_deps, dtype
         self.measure_top_k = measure_top_k
         self.measure_iters = measure_iters
+        self.engine = engine
 
     def tune(self, L: CSR) -> PortfolioReport:
         import time
@@ -276,18 +281,19 @@ class StrategyPortfolio:
         return report
 
     def _measure(self, cand: PortfolioCandidate) -> float:
-        """End-to-end per-solve wall time (host preamble + jitted engine)."""
+        """End-to-end per-solve wall time (host preamble + compiled engine),
+        dispatched through the engine registry."""
         import time
-        from ..solver.levelset import solve_scan, to_device
-        import jax
         import jax.numpy as jnp
+        from ..solver.engines import resolve_engine
+        from ..solver.levelset import to_device
         ds = to_device(cand.sched)
-        fn = jax.jit(lambda cc: solve_scan(ds, cc))
+        fn = resolve_engine(self.engine).compile(ds)
         b = np.random.default_rng(0).standard_normal(cand.ts.A.n_rows)
         c = jnp.asarray(cand.ts.preamble(b), dtype=ds.dtype)
-        fn(c).block_until_ready()                      # compile outside timer
+        jnp.asarray(fn(c)).block_until_ready()         # compile outside timer
         t0 = time.perf_counter()
         for _ in range(self.measure_iters):
             cc = jnp.asarray(cand.ts.preamble(b), dtype=ds.dtype)
-            fn(cc).block_until_ready()
+            jnp.asarray(fn(cc)).block_until_ready()
         return (time.perf_counter() - t0) / self.measure_iters * 1e6

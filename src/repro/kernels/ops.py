@@ -6,23 +6,16 @@ REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) to compile with Mosaic.
 """
 from __future__ import annotations
 
-import os
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..solver.schedule import LevelSchedule
 from ..solver.levelset import to_device
-from .sptrsv_level import sptrsv_groups_pallas, sptrsv_groups_pallas_multi
+from ..solver.engines import PallasEngine, default_interpret, get_engine
 from .spmv_ell import spmv_ell_pallas
 from . import ref
 
 __all__ = ["default_interpret", "sptrsv_solve", "spmv_ell", "ell_pack_csr"]
-
-
-def default_interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def sptrsv_solve(sched: LevelSchedule, c: np.ndarray,
@@ -33,26 +26,22 @@ def sptrsv_solve(sched: LevelSchedule, c: np.ndarray,
     c may be (n,) or batched (n, R) — batched solves run the multi-RHS
     kernel, streaming the schedule once for all right-hand sides.  Pass a
     pre-staged DeviceSchedule as `dsched` to skip restaging on repeated
-    solves (the TriangularOperator does).
+    solves.  Dispatches through the engine registry: interpret=None uses
+    the registered "pallas" engine (REPRO_PALLAS_INTERPRET default), an
+    explicit bool pins interpret mode for this call.
     """
-    interpret = default_interpret() if interpret is None else interpret
-    dtype = sched.dtype
-    c = jnp.asarray(c, dtype=dtype)
-    tail = (c.shape[1],) if c.ndim == 2 else ()
-    c_pad = jnp.concatenate([c, jnp.zeros((1,) + tail, dtype)], axis=0)
-    # the engines' DeviceSchedule staging is the single source of truth for
-    # group leaf order (GROUP_LEAVES + carry leaves when present)
-    groups = (dsched if dsched is not None else to_device(sched)).groups
+    ds = dsched if dsched is not None else to_device(sched)
     if use_ref:
-        out = ref.sptrsv_levels_grouped_ref(groups, c_pad, n=sched.n,
+        dtype = sched.dtype
+        cc = jnp.asarray(c, dtype=dtype)
+        tail = (cc.shape[1],) if cc.ndim == 2 else ()
+        c_pad = jnp.concatenate([cc, jnp.zeros((1,) + tail, dtype)], axis=0)
+        out = ref.sptrsv_levels_grouped_ref(ds.groups, c_pad, n=sched.n,
                                             n_carry=sched.n_carry)
-    elif tail:
-        out = sptrsv_groups_pallas_multi(groups, c_pad, n=sched.n,
-                                         n_carry=sched.n_carry,
-                                         interpret=interpret)
     else:
-        out = sptrsv_groups_pallas(groups, c_pad, n=sched.n,
-                                   n_carry=sched.n_carry, interpret=interpret)
+        eng = get_engine("pallas") if interpret is None \
+            else PallasEngine(interpret=interpret)
+        out = eng.compile(ds)(c)
     return np.asarray(out)
 
 

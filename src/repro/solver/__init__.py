@@ -4,8 +4,13 @@ from .schedule import (LevelSchedule, WidthGroup, build_schedule,
                        schedule_for_transformed, validate_schedule)
 from .levelset import (DeviceSchedule, to_device, solve_scan, solve_unrolled,
                        solve)
+from .engines import (Engine, ScanEngine, UnrolledEngine, PallasEngine,
+                      register_engine, resolve_engine, get_engine,
+                      registered_engines, available_engines, default_engine,
+                      engine_capabilities)
 from .operator import (TriangularOperator, OperatorStats, matrix_fingerprint,
-                       default_cache_dir)
+                       default_cache_dir, orient_lower)
+from .api import sptrsv, with_unit_diagonal
 from . import distributed
 
 __all__ = [
@@ -13,7 +18,11 @@ __all__ = [
     "LevelSchedule", "WidthGroup", "build_schedule", "schedule_for_csr",
     "schedule_for_preamble", "schedule_for_transformed", "validate_schedule",
     "DeviceSchedule", "to_device", "solve_scan", "solve_unrolled", "solve",
+    "Engine", "ScanEngine", "UnrolledEngine", "PallasEngine",
+    "register_engine", "resolve_engine", "get_engine", "registered_engines",
+    "available_engines", "default_engine", "engine_capabilities",
     "TriangularOperator", "OperatorStats", "matrix_fingerprint",
-    "default_cache_dir",
+    "default_cache_dir", "orient_lower",
+    "sptrsv", "with_unit_diagonal",
     "distributed",
 ]

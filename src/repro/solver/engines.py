@@ -1,0 +1,226 @@
+"""Execution-engine protocol + registry: the single seam for solve dispatch.
+
+Before this module, engine selection was bare strings ("scan" / "unrolled" /
+"pallas") if/else-dispatched independently in solver/levelset.py,
+solver/operator.py, and kernels/ops.py — adding a backend meant touching all
+three, and a typo silently fell through to the unrolled engine.  Now every
+engine is a registered object with capability metadata, and every consumer
+(`levelset.solve`, `TriangularOperator`, `sptrsv`, the portfolio's measured
+mode, `benchmarks/`) resolves it through one entry point:
+
+    eng = resolve_engine("scan")          # name, Engine instance, or None
+    fn  = eng.compile(dsched)             # DeviceSchedule -> jnp callable
+    x   = fn(c)                           # c: (n,) or batched (n, R)
+
+Engine contract
+===============
+* `name`                    — stable registry key (also the cache-key form).
+* `supports_batched_rhs`    — accepts (n, R) right-hand sides.
+* `supports_pallas_backend` — lowers through the Pallas kernel path.
+* `dtypes`                  — schedule dtypes the engine is validated for.
+* `available()`             — importable/usable in this process (an engine
+  may be registered but unavailable, e.g. a TPU-only backend on CPU).
+* `compile(dsched)`         — returns `fn(c) -> x` over jnp arrays in the
+  schedule dtype; `fn` may be called repeatedly (serving path) and must not
+  restage the schedule.
+
+Unknown names raise `ValueError` listing the registered engines — never a
+silent fallback.  String engine names remain accepted at the public entry
+points as thin shims that resolve here; `levelset.solve`'s legacy string
+kwarg additionally emits a `DeprecationWarning` (CI fails on such warnings
+originating from repro's own modules, so internal code must pass Engine
+objects).
+"""
+from __future__ import annotations
+
+import os
+import warnings
+
+__all__ = ["Engine", "ScanEngine", "UnrolledEngine", "PallasEngine",
+           "register_engine", "resolve_engine", "get_engine",
+           "registered_engines", "available_engines", "default_engine",
+           "default_interpret", "engine_capabilities", "DEFAULT_ENGINE"]
+
+DEFAULT_ENGINE = "scan"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode default: on unless REPRO_PALLAS_INTERPRET=0."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+class Engine:
+    """Base class / protocol for SpTRSV execution engines (module doc)."""
+
+    name: str = "abstract"
+    supports_batched_rhs: bool = True
+    supports_pallas_backend: bool = False
+    dtypes: tuple = ("float32", "float64")
+
+    def available(self) -> bool:
+        return True
+
+    def compile(self, dsched):
+        """DeviceSchedule -> callable fn(c) -> x over jnp arrays."""
+        raise NotImplementedError
+
+    def capabilities(self) -> dict:
+        return {
+            "name": self.name,
+            "supports_batched_rhs": self.supports_batched_rhs,
+            "supports_pallas_backend": self.supports_pallas_backend,
+            "dtypes": list(self.dtypes),        # list: JSON round-trip stable
+            "available": self.available(),
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+class ScanEngine(Engine):
+    """`lax.scan` over steps — HLO size independent of step count (default)."""
+
+    name = "scan"
+
+    def compile(self, dsched):
+        import jax
+        from .levelset import solve_scan
+        return jax.jit(lambda c: solve_scan(dsched, c))
+
+
+class UnrolledEngine(Engine):
+    """Trace-time unrolled steps — bigger HLO, more fusion freedom; sensible
+    after the transformation shrank the step count."""
+
+    name = "unrolled"
+
+    def compile(self, dsched):
+        import jax
+        from .levelset import solve_unrolled
+        return jax.jit(lambda c: solve_unrolled(dsched, c))
+
+
+class PallasEngine(Engine):
+    """Pallas TPU kernel (interpret mode on CPU): one grid step per schedule
+    step, x/carry resident in VMEM.  `interpret=None` follows the
+    REPRO_PALLAS_INTERPRET env default at compile time."""
+
+    supports_pallas_backend = True
+    dtypes = ("float32",)
+
+    def __init__(self, interpret: bool | None = None, name: str = "pallas"):
+        self.name = name
+        self.interpret = interpret
+
+    def available(self) -> bool:
+        try:
+            import jax.experimental.pallas  # noqa: F401
+        except Exception:  # pragma: no cover - env dependent
+            return False
+        return True
+
+    def compile(self, dsched):
+        import jax.numpy as jnp
+        from ..kernels.sptrsv_level import (sptrsv_groups_pallas,
+                                            sptrsv_groups_pallas_multi)
+        interpret = (default_interpret() if self.interpret is None
+                     else self.interpret)
+        groups, n, n_carry = dsched.groups, dsched.n, dsched.n_carry
+        dtype = dsched.dtype
+
+        def fn(c):
+            c = jnp.asarray(c, dtype=dtype)
+            tail = (c.shape[1],) if c.ndim == 2 else ()
+            c_pad = jnp.concatenate([c, jnp.zeros((1,) + tail, dtype)],
+                                    axis=0)
+            kern = sptrsv_groups_pallas_multi if tail else sptrsv_groups_pallas
+            return kern(groups, c_pad, n=n, n_carry=n_carry,
+                        interpret=interpret)
+
+        return fn
+
+
+# -- registry -----------------------------------------------------------------
+
+_REGISTRY: dict[str, Engine] = {}
+
+
+def register_engine(engine: Engine, overwrite: bool = False) -> Engine:
+    """Register an engine under `engine.name`; returns it for chaining."""
+    if not isinstance(engine.name, str) or not engine.name:
+        raise TypeError(f"engine must carry a non-empty string name: "
+                        f"{engine!r}")
+    if engine.name in _REGISTRY and not overwrite:
+        raise ValueError(f"engine {engine.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def registered_engines() -> tuple:
+    """Sorted names of every registered engine (available or not)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def available_engines() -> tuple:
+    """Sorted names of registered engines whose available() is True."""
+    return tuple(name for name in registered_engines()
+                 if _REGISTRY[name].available())
+
+
+def engine_capabilities() -> dict:
+    """name -> capability dict for every registered engine (CI smoke uses
+    this to print the capability matrix)."""
+    return {name: _REGISTRY[name].capabilities()
+            for name in registered_engines()}
+
+
+def get_engine(name: str) -> Engine:
+    """Look a registered engine up by name; unknown names raise ValueError
+    listing the registered options (never a silent fallback)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered engines: "
+            f"{list(registered_engines())}") from None
+
+
+def default_engine() -> Engine:
+    return _REGISTRY[DEFAULT_ENGINE]
+
+
+def resolve_engine(spec=None) -> Engine:
+    """Resolve an engine spec: None -> default, a name string -> registry
+    lookup, an Engine (or anything with name + compile) passes through."""
+    if spec is None:
+        return default_engine()
+    if isinstance(spec, str):
+        return get_engine(spec)
+    if isinstance(spec, Engine) or (hasattr(spec, "compile")
+                                    and hasattr(spec, "name")):
+        return spec
+    raise TypeError(f"engine spec must be None, a registered name, or an "
+                    f"Engine instance, got {type(spec).__name__}")
+
+
+def resolve_engine_shim(spec, where: str, stacklevel: int = 3) -> Engine:
+    """Legacy string-kwarg shim: same resolution as resolve_engine, but a
+    bare string additionally emits a DeprecationWarning attributed to the
+    caller (so CI can fail on internal use while user code keeps working).
+    Resolution happens first: typos raise the ValueError naming the
+    registered engines, never the deprecation notice."""
+    if isinstance(spec, str):
+        eng = get_engine(spec)
+        warnings.warn(
+            f"passing engine name strings to {where} is deprecated; pass an "
+            f"Engine from repro.solver.engines (e.g. resolve_engine({spec!r}))",
+            DeprecationWarning, stacklevel=stacklevel)
+        return eng
+    return resolve_engine(spec)
+
+
+register_engine(ScanEngine())
+register_engine(UnrolledEngine())
+register_engine(PallasEngine(interpret=None, name="pallas"))
+register_engine(PallasEngine(interpret=True, name="pallas-interpret"))

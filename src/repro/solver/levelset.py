@@ -117,10 +117,17 @@ def solve_unrolled(dsched: DeviceSchedule, c: jax.Array) -> jax.Array:
     return x[:dsched.n]
 
 
-def solve(sched: LevelSchedule, c: np.ndarray, engine: str = "scan",
+def solve(sched: LevelSchedule, c: np.ndarray, engine=None,
           dsched: DeviceSchedule | None = None) -> np.ndarray:
-    """Convenience host-level entry point (jits per schedule identity)."""
+    """Convenience host-level entry point (compiles per schedule identity).
+
+    engine: an Engine from repro.solver.engines, a registered name, or None
+    for the default scan engine.  Unknown names raise ValueError listing the
+    registered engines.  Bare strings are a deprecation shim — pass Engine
+    objects (or use repro.solver.api.sptrsv) in new code.
+    """
+    from .engines import resolve_engine_shim
+    eng = resolve_engine_shim(engine, where="levelset.solve(engine=...)")
     ds = dsched if dsched is not None else to_device(sched)
-    fn = solve_scan if engine == "scan" else solve_unrolled
-    out = jax.jit(lambda cc: fn(ds, cc))(jnp.asarray(c, dtype=ds.dtype))
+    out = eng.compile(ds)(jnp.asarray(c, dtype=ds.dtype))
     return np.asarray(out)

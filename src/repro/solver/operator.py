@@ -13,6 +13,21 @@ keyed by a matrix fingerprint, in memory and persistently on disk
 same matrix + configuration is a cache hit: no transform, no tuning, no
 schedule compile.
 
+All four triangular sweeps share the one lower-triangular pipeline:
+`side="lower"|"upper"` selects the stored triangle, `transpose=True` solves
+with its transpose (the backward sweep of an ILU/IC preconditioner).  The
+effective system is always reduced to a lower-triangular one — transposing
+and/or reversing both axes (sparse.csr.reverse_both) — so every strategy,
+the width-bucketed schedule compiler, and every registered engine work for
+both sweeps with no kernel changes.  `op.transposed()` returns the adjoint
+operator (same matrix, flipped sweep): it is the backward pass of the
+forward solve, which is what `repro.solver.api.sptrsv` builds its
+`jax.custom_vjp` on.  Orientation bits are part of the cache key.
+
+Engines resolve through the repro.solver.engines registry: `engine=` takes
+a registered name, an Engine instance, or None for the default scan engine;
+unknown names raise with the registered options.
+
 `solve` accepts a single right-hand side or a batched (n, k) block — the
 engines and the Pallas kernel stream the schedule once for all k columns,
 so one transformed matrix amortizes over many b's (the serving scenario).
@@ -37,12 +52,40 @@ from pathlib import Path
 
 import numpy as np
 
-from ..sparse.csr import CSR
+from ..sparse.csr import CSR, reverse_both
 
 __all__ = ["TriangularOperator", "OperatorStats", "matrix_fingerprint",
-           "default_cache_dir"]
+           "default_cache_dir", "orient_lower"]
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
+
+
+def orient_lower(A: CSR, side: str, transpose: bool) -> tuple:
+    """Reduce any triangular solve to a lower-triangular one.
+
+    Returns (L_eff, reversed): solve(A, b, side, transpose) ==
+    unreverse(solve_lower(L_eff, reverse(b))), where reverse flips axis 0
+    iff `reversed`.  The four sweeps:
+
+      (lower, False)  L x  = b   ->  L itself
+      (upper, True)   U'x  = b   ->  U' (already lower)
+      (lower, True)   L'x  = b   ->  P L' P, rows/cols reversed
+      (upper, False)  U x  = b   ->  P U  P, rows/cols reversed
+
+    (P is the reversal permutation; PMP of an upper-triangular M is lower-
+    triangular with the identical dependency DAG, so level sets, transform
+    strategies, and step compaction all apply unchanged.)
+    """
+    if side not in ("lower", "upper"):
+        raise ValueError(f"side must be 'lower' or 'upper', got {side!r}")
+    lower = side == "lower"
+    if lower and not transpose:
+        return A, False
+    if not lower and transpose:
+        return A.transpose(), False
+    if lower:                       # lower, transpose
+        return reverse_both(A.transpose()), True
+    return reverse_both(A), True    # upper, no transpose
 
 
 def default_cache_dir() -> Path:
@@ -110,31 +153,66 @@ class TriangularOperator:
             cls._memory_cache.popitem(last=False)
 
     def __init__(self, L: CSR, payload: dict, cache_source: str):
-        self._L = L
-        self._ts = payload["ts"]
+        self._L = L                 # the ORIGINAL matrix, as handed in
+        self._ts = payload["ts"]    # transform of the oriented lower system
         self._sched = payload["sched"]
         self.report = payload.get("report")        # slim PortfolioReport|None
         self.strategy = payload["strategy"]        # winning strategy label
-        self.engine = payload["config"]["engine"]
-        self._dsched = None
-        self._jitted = {}
+        cfg = payload["config"]
+        self.side = cfg.get("side", "lower")
+        self.transpose = bool(cfg.get("transpose", False))
+        # recorded by orient_lower at build time (single source of truth
+        # for which sweeps reverse the axes)
+        self._reversed = bool(payload["reversed"])
+        # from_csr overrides this with the actually-resolved instance (which
+        # may be an unregistered/custom-configured Engine the registry does
+        # not know); name-only resolution is just the cached-payload default
+        from .engines import get_engine
+        self._engine_name = payload.get("engine", "scan")
+        try:
+            self._engine = get_engine(self._engine_name)
+        except ValueError:          # custom engine: injected by from_csr
+            self._engine = None
+        self._build_kwargs = {}     # filled by from_csr for transposed()
+        # staged schedule + compiled fns live on the payload, NOT the
+        # operator, so memory-cache hits share them across from_csr calls
+        # (the disk writer strips "_"-prefixed keys; jitted fns can't
+        # pickle).  Maps engine name -> (engine instance, compiled fn); the
+        # instance is kept for an identity check so two differently
+        # configured engines sharing a name never swap compiled code.
+        self._runtime = payload.setdefault("_runtime", {"compiled": {}})
         self.stats = OperatorStats(cache_source=cache_source,
                                    tune_ms=payload.get("tune_ms", 0.0))
 
+    @property
+    def engine(self) -> str:
+        """Name of the default engine (back-compat accessor)."""
+        return self._engine.name if self._engine is not None \
+            else self._engine_name
+
     # -- construction ---------------------------------------------------------
     @classmethod
-    def from_csr(cls, L: CSR, tune="auto", *, chunk: int = 256,
-                 max_deps: int = 16, dtype=np.float32, engine: str = "scan",
+    def from_csr(cls, L: CSR, tune="auto", *, side: str = "lower",
+                 transpose: bool = False, chunk: int = 256,
+                 max_deps: int = 16, dtype=np.float32, engine=None,
                  cache: bool = True, cache_dir=None, portfolio=None,
                  cost_model=None,
                  measure_top_k: int = 0) -> "TriangularOperator":
-        """Build (or load) the operator for lower-triangular L.
+        """Build (or load) the operator for triangular L.
 
+        side/transpose: which sweep this operator performs — `side` names
+                the stored triangle ("lower" or "upper"), `transpose=True`
+                solves with its transpose (L^T / U^T).  The effective
+                system is reduced to lower-triangular form (orient_lower),
+                so strategies/compiler/engines are shared by all sweeps.
         tune:   "auto" — run the StrategyPortfolio tuner and take its pick;
                 a stable strategy name ("avgLevelCost", ...) or a Strategy
                 instance — skip tuning and use that strategy as-is.
+        engine: default execution engine — a registered name, an Engine
+                from repro.solver.engines, or None for the scan engine.
         cache:  look up / persist the compiled artifact (memory + disk,
-                keyed by matrix fingerprint and configuration).
+                keyed by matrix fingerprint and configuration, orientation
+                bits included).
         cost_model: tuner scoring constants (a portfolio CostModel, e.g.
                 CostModel.cpu() when the scan engine serves on CPU); part
                 of the cache key.  tune="auto" only.
@@ -147,35 +225,58 @@ class TriangularOperator:
         import dataclasses as _dc
         from ..core.portfolio import StrategyPortfolio, make_strategy
         from ..core.strategies import strategy_label
+        from .engines import resolve_engine
         from .schedule import schedule_for_transformed
 
+        if side not in ("lower", "upper"):
+            raise ValueError(f"side must be 'lower' or 'upper', got {side!r}")
+        eng = resolve_engine(engine)
         cache = cache and portfolio is None
         tune_key = "auto" if tune == "auto" else \
             strategy_label(make_strategy(tune))
-        cfg = {"tune": tune_key, "chunk": chunk, "max_deps": max_deps,
-               "dtype": np.dtype(dtype).name, "engine": engine,
+        # the compiled artifact is engine-independent (engine is a
+        # solve-time choice), EXCEPT when measured re-ranking ran: then the
+        # tuner's pick depends on which engine was timed
+        cfg = {"tune": tune_key, "side": side, "transpose": bool(transpose),
+               "chunk": chunk, "max_deps": max_deps,
+               "dtype": np.dtype(dtype).name,
+               "engine": eng.name if measure_top_k > 0 else None,
                "measure_top_k": measure_top_k,
                "cost_model": (None if cost_model is None
                               else sorted(_dc.asdict(cost_model).items()))}
+        build_kwargs = {"tune": tune, "side": side,
+                        "transpose": bool(transpose), "chunk": chunk,
+                        "max_deps": max_deps, "dtype": dtype, "engine": eng,
+                        "cache": cache, "cache_dir": cache_dir,
+                        "portfolio": portfolio, "cost_model": cost_model,
+                        "measure_top_k": measure_top_k}
         key = matrix_fingerprint(L) + "-" + hashlib.sha256(
             repr(sorted(cfg.items())).encode()).hexdigest()[:16]
+
+        def _finish(payload, source):
+            op = cls(L, payload, cache_source=source)
+            op._engine = eng        # the resolved instance, not a name
+            op._build_kwargs = build_kwargs
+            return op
 
         if cache:
             payload = cls._memory_get(key)
             if payload is not None:
-                return cls(L, payload, cache_source="memory")
+                return _finish(payload, "memory")
             payload = cls._disk_load(key, cache_dir)
             if payload is not None:
                 cls._memory_put(key, payload)
-                return cls(L, payload, cache_source="disk")
+                return _finish(payload, "disk")
 
+        L_eff, reversed_ = orient_lower(L, side, bool(transpose))
         t0 = time.perf_counter()
         report = None
         if tune == "auto":
             tuner = portfolio if portfolio is not None else StrategyPortfolio(
                 chunk=chunk, max_deps=max_deps, dtype=dtype,
-                cost_model=cost_model, measure_top_k=measure_top_k)
-            report = tuner.tune(L)
+                cost_model=cost_model, measure_top_k=measure_top_k,
+                engine=eng)
+            report = tuner.tune(L_eff)
             best = report.best
             ts, sched, label = best.ts, best.sched, best.label
             report = report.slim()      # candidates keep stats, drop arrays
@@ -183,16 +284,33 @@ class TriangularOperator:
             strat = make_strategy(tune)
             label = strategy_label(strat)
             from ..core.transform import transform
-            ts = transform(L, strat, validate=False, codegen=False)
+            ts = transform(L_eff, strat, validate=False, codegen=False)
             sched = schedule_for_transformed(ts, chunk=chunk,
                                              max_deps=max_deps, dtype=dtype)
         payload = {"version": CACHE_VERSION, "strategy": label, "ts": ts,
                    "sched": sched, "report": report, "config": cfg,
+                   "reversed": reversed_, "engine": eng.name,
                    "tune_ms": (time.perf_counter() - t0) * 1e3}
         if cache:
             cls._memory_put(key, payload)
             cls._disk_store(key, payload, cache_dir)
-        return cls(L, payload, cache_source="built")
+        return _finish(payload, "built")
+
+    def transposed(self) -> "TriangularOperator":
+        """The adjoint operator: same stored triangle, flipped sweep.
+
+        For a forward `L x = b` operator this is the `L^T y = g` operator —
+        exactly the cotangent solve of the forward one, which is what
+        `sptrsv`'s custom VJP runs as its backward pass.  Goes through
+        from_csr, so it shares the memory/disk cache.
+        """
+        kw = dict(self._build_kwargs)
+        if not kw:      # constructed without from_csr bookkeeping
+            kw = {"tune": self.strategy, "side": self.side,
+                  "transpose": self.transpose, "engine": self._engine}
+        kw["transpose"] = not kw["transpose"]
+        tune = kw.pop("tune")
+        return TriangularOperator.from_csr(self._L, tune, **kw)
 
     @staticmethod
     def _cache_path(key: str, cache_dir) -> Path:
@@ -216,6 +334,9 @@ class TriangularOperator:
     @classmethod
     def _disk_store(cls, key: str, payload: dict, cache_dir) -> None:
         path = cls._cache_path(key, cache_dir)
+        # "_"-prefixed keys are process-local runtime state (staged device
+        # arrays, compiled fns) — never serialized
+        payload = {k: v for k, v in payload.items() if not k.startswith("_")}
         try:
             path.parent.mkdir(parents=True, exist_ok=True)
             tmp = path.with_suffix(".tmp")
@@ -243,57 +364,68 @@ class TriangularOperator:
         return self._ts
 
     def _staged(self):
-        if self._dsched is None:
+        ds = self._runtime.get("dsched")
+        if ds is None:
             from .levelset import to_device
-            self._dsched = to_device(self._sched)
-        return self._dsched
+            ds = self._runtime["dsched"] = to_device(self._sched)
+        return ds
 
-    def _device_solve(self, c: np.ndarray, engine: str) -> np.ndarray:
+    def _device_solve(self, c: np.ndarray, engine) -> np.ndarray:
         """One schedule execution in the schedule dtype."""
-        import jax
         import jax.numpy as jnp
-        ds = self._staged()      # staged once, reused by every solve/refine
-        if engine == "pallas":
-            from ..kernels import ops
-            return ops.sptrsv_solve(self._sched, c, dsched=ds)
-        from .levelset import solve_scan, solve_unrolled
-        fn = self._jitted.get(engine)
-        if fn is None:
-            raw = solve_scan if engine == "scan" else solve_unrolled
-            fn = jax.jit(lambda cc: raw(ds, cc))
-            self._jitted[engine] = fn
+        ds = self._staged()      # staged once, shared via the payload cache
+        cached = self._runtime["compiled"].get(engine.name)
+        if cached is not None and cached[0] is engine:
+            fn = cached[1]
+        else:
+            fn = engine.compile(ds)
+            self._runtime["compiled"][engine.name] = (engine, fn)
         return np.asarray(fn(jnp.asarray(c, dtype=ds.dtype)))
 
-    def solve(self, b: np.ndarray, *, engine: str | None = None,
+    def _oriented_solve(self, v: np.ndarray, engine) -> np.ndarray:
+        """Device solve of the oriented system for an original-orientation
+        right-hand side v: reverse, preamble, schedule, un-reverse."""
+        if self._reversed:
+            v = v[::-1]
+        x = self._device_solve(self._ts.preamble(v), engine) \
+            .astype(np.float64)
+        return x[::-1] if self._reversed else x
+
+    def solve(self, b: np.ndarray, *, engine=None,
               refine_tol: float = 1e-10, max_refine: int = 6) -> np.ndarray:
-        """Solve L x = b for b of shape (n,) or batched (n, k).
+        """Solve the operator's sweep (L, L^T, U, or U^T) x = b for b of
+        shape (n,) or batched (n, k).
 
         Runs the preamble + compiled schedule in the schedule dtype, then
-        iteratively refines in float64 against the original L until the
-        relative residual max|b - Lx| / max(1, max|b|) <= refine_tol (or
-        max_refine correction rounds).  Set max_refine=0 for the raw device
-        output with no residual computed (stats.last_residual stays NaN) —
-        the cheapest per-solve path.  Returns float64, same leading shape
-        as b.
+        iteratively refines in float64 against the original matrix until
+        the relative residual max|b - Ax| / max(1, max|b|) <= refine_tol
+        (or max_refine correction rounds); the residual matvec is
+        transpose-aware, so L^T/U^T solves refine against the transposed
+        operator.  Set max_refine=0 for the raw device output with no
+        residual computed (stats.last_residual stays NaN) — the cheapest
+        per-solve path.  Returns float64, same leading shape as b.
         """
-        engine = self.engine if engine is None else engine
+        from .engines import resolve_engine
+        eng = self._engine if engine is None else resolve_engine(engine)
+        if eng is None:     # payload names a custom engine we don't hold
+            raise ValueError(
+                "operator has no resolvable default engine "
+                f"({self._engine_name!r}); pass engine= explicitly")
         b = np.asarray(b, dtype=np.float64)
         if b.ndim not in (1, 2) or b.shape[0] != self.n:
             raise ValueError(f"b must be ({self.n},) or ({self.n}, k), "
                              f"got {b.shape}")
         t0 = time.perf_counter()
-        x = self._device_solve(self._ts.preamble(b), engine) \
-            .astype(np.float64)
+        x = self._oriented_solve(b, eng)
         bscale = max(1.0, float(np.abs(b).max(initial=0.0)))
         resid = float("nan")
         rounds = 0
         while max_refine > 0:       # refinement off => skip the host matvec
-            r = b - self._L.matvec(x)
+            r = b - self._L.matvec(x, transpose=self.transpose)
             resid = float(np.abs(r).max(initial=0.0)) / bscale
             if resid <= refine_tol or rounds >= max_refine:
                 break
-            x = x + self._device_solve(self._ts.preamble(r), engine) \
-                .astype(np.float64)
+            x = x + self._oriented_solve(r, eng)
             rounds += 1
         ms = (time.perf_counter() - t0) * 1e3
         st = self.stats
@@ -306,6 +438,7 @@ class TriangularOperator:
         return x
 
     def __repr__(self) -> str:  # pragma: no cover
-        return (f"TriangularOperator(n={self.n}, strategy={self.strategy!r}, "
+        return (f"TriangularOperator(n={self.n}, side={self.side!r}, "
+                f"transpose={self.transpose}, strategy={self.strategy!r}, "
                 f"steps={self._sched.num_steps}, engine={self.engine!r}, "
                 f"cache={self.stats.cache_source})")

@@ -12,7 +12,7 @@ from typing import Iterable
 
 import numpy as np
 
-__all__ = ["CSR", "from_coo", "identity", "tril"]
+__all__ = ["CSR", "from_coo", "identity", "tril", "triu", "reverse_both"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,15 +74,22 @@ class CSR:
         d[rows[mask]] = self.data[mask]
         return d
 
-    def matvec(self, x: np.ndarray) -> np.ndarray:
-        """y = A @ x for x of shape (n_cols,) or batched (n_cols, k)."""
+    def matvec(self, x: np.ndarray, transpose: bool = False) -> np.ndarray:
+        """y = A @ x (or A.T @ x) for x of shape (n,) or batched (n, k).
+
+        The transpose path scatters instead of gathers — no materialized
+        A.T needed, so iterative-refinement residuals for L^T solves stay
+        O(nnz) with zero preprocessing.
+        """
         rows = np.repeat(np.arange(self.n_rows), self.row_nnz())
-        gathered = x[self.indices]
+        src, dst, n_out = ((rows, self.indices, self.n_cols) if transpose
+                           else (self.indices, rows, self.n_rows))
+        gathered = x[src]
         prod = (self.data * gathered if gathered.ndim == 1
                 else self.data[:, None] * gathered)
-        out = np.zeros((self.n_rows,) + x.shape[1:],
+        out = np.zeros((n_out,) + x.shape[1:],
                        dtype=np.result_type(self.data, x))
-        np.add.at(out, rows, prod)
+        np.add.at(out, dst, prod)
         return out
 
     def to_dense(self) -> np.ndarray:
@@ -103,6 +110,17 @@ class CSR:
         counts = np.bincount(self.indices, minlength=self.n_cols)
         colptr[1:] = np.cumsum(counts)
         return colptr, rows[order], order
+
+    def transpose(self) -> "CSR":
+        """Materialized A.T as CSR (the CSC view reinterpreted).
+
+        The stable argsort in transpose_csc_view keeps CSR order within a
+        column, so the result's rows come out column-sorted without a
+        re-sort.
+        """
+        colptr, rows, perm = self.transpose_csc_view()
+        return CSR(indptr=colptr, indices=rows, data=self.data[perm],
+                   shape=(self.n_cols, self.n_rows))
 
     def check(self) -> None:
         assert self.indptr.shape == (self.n_rows + 1,)
@@ -153,3 +171,25 @@ def tril(m: CSR, keep_diagonal: bool = True) -> CSR:
     keep = m.indices < rows + (1 if keep_diagonal else 0)
     return from_coo(rows[keep], m.indices[keep], m.data[keep], m.shape,
                     sum_duplicates=False)
+
+
+def triu(m: CSR, keep_diagonal: bool = True) -> CSR:
+    """Upper-triangular part of `m` (optionally including the diagonal)."""
+    rows = np.repeat(np.arange(m.n_rows), m.row_nnz())
+    keep = m.indices > rows - (1 if keep_diagonal else 0)
+    return from_coo(rows[keep], m.indices[keep], m.data[keep], m.shape,
+                    sum_duplicates=False)
+
+
+def reverse_both(m: CSR) -> CSR:
+    """P @ m @ P for the reversal permutation P (i -> n-1-i on both axes).
+
+    Reversing both axes turns an upper-triangular matrix into a
+    lower-triangular one with the same dependency DAG (edges reversed in
+    row order) — the bridge that lets upper/transpose solves reuse the
+    lower-triangular schedule compiler: solve(U, b) == reverse(
+    solve(reverse_both(U), reverse(b))).
+    """
+    rows = np.repeat(np.arange(m.n_rows), m.row_nnz())
+    return from_coo(m.n_rows - 1 - rows, m.n_cols - 1 - m.indices, m.data,
+                    m.shape, sum_duplicates=False)

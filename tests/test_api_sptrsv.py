@@ -1,0 +1,230 @@
+"""sptrsv: the unified solve surface — upper/transpose sweeps vs scipy,
+ILU-style round trips, and jax.grad through the custom VJP (ISSUE 3)."""
+import numpy as np
+import pytest
+
+from repro.solver import TriangularOperator, available_engines, sptrsv
+from repro.sparse import generators
+
+try:
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.linalg import spsolve_triangular
+    HAS_SCIPY = True
+except ModuleNotFoundError:             # pragma: no cover - env dependent
+    HAS_SCIPY = False
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memory_cache():
+    TriangularOperator.clear_memory_cache()
+    yield
+    TriangularOperator.clear_memory_cache()
+
+
+def _rel_err(x, x_ref):
+    return np.abs(x - x_ref).max() / max(1.0, np.abs(x_ref).max())
+
+
+def _ref_solve(A, b, lower, transpose):
+    """scipy.sparse.linalg.spsolve_triangular when present, dense fallback."""
+    if HAS_SCIPY:
+        M = csr_matrix(A.to_dense())
+        if transpose:
+            M = M.T.tocsr()
+        return spsolve_triangular(M, b, lower=(lower == (not transpose)))
+    import numpy.linalg as la
+    M = A.to_dense().T if transpose else A.to_dense()
+    return la.solve(M, b)
+
+
+GENS = [
+    generators.random_lower(150, avg_offdiag=2.5, seed=3, max_back=20),
+    generators.banded(80, 12, seed=1),          # splits rows -> carry lanes
+]
+
+
+@pytest.mark.parametrize("lower", [True, False])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_all_sweeps_match_scipy_under_every_engine(lower, transpose):
+    """Acceptance: upper and transpose solves match spsolve_triangular to
+    <= 1e-8 relative on the generator suite under every registered
+    (available) engine."""
+    for L in GENS:
+        A = L if lower else L.transpose()
+        b = np.random.default_rng(0).standard_normal(A.n_rows)
+        x_ref = _ref_solve(A, b, lower, transpose)
+        for name in available_engines():
+            x = sptrsv(A, b, lower=lower, transpose=transpose, engine=name,
+                       chunk=64, max_deps=8, cache=False)
+            assert _rel_err(x, x_ref) < 1e-8, (name, lower, transpose)
+
+
+def test_all_sweeps_thin_level_analogue():
+    """The lung2-like thin-level analogue through all four sweeps (scan
+    and pallas engines; unrolled would pay a minutes-long XLA compile on
+    ~500-step untransformed schedules — docs/strategies.md)."""
+    L = generators.lung2_like(scale=0.03)
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    for lower in (True, False):
+        for transpose in (False, True):
+            A = L if lower else L.transpose()
+            x_ref = _ref_solve(A, b, lower, transpose)
+            for name in ("scan", "pallas-interpret"):
+                x = sptrsv(A, b, lower=lower, transpose=transpose,
+                           engine=name, chunk=64, max_deps=8, cache=False)
+                assert _rel_err(x, x_ref) < 1e-8, (name, lower, transpose)
+
+
+def test_batched_rhs_all_sweeps():
+    L = generators.random_lower(100, avg_offdiag=2.0, seed=9, max_back=12)
+    B = np.random.default_rng(2).standard_normal((100, 4))
+    for lower in (True, False):
+        for transpose in (False, True):
+            A = L if lower else L.transpose()
+            X = sptrsv(A, B, lower=lower, transpose=transpose, chunk=32,
+                       max_deps=4, cache=False)
+            assert X.shape == B.shape
+            for j in range(B.shape[1]):
+                x_ref = _ref_solve(A, B[:, j], lower, transpose)
+                assert _rel_err(X[:, j], x_ref) < 1e-8
+
+
+def test_unit_diagonal_matches_scipy():
+    L = generators.random_lower(90, avg_offdiag=2.0, seed=4, max_back=10)
+    b = np.random.default_rng(3).standard_normal(90)
+    x = sptrsv(L, b, unit_diagonal=True, cache=False)
+    dense = L.to_dense()
+    np.fill_diagonal(dense, 1.0)
+    x_ref = np.linalg.solve(dense, b)
+    assert _rel_err(x, x_ref) < 1e-8
+
+
+def test_ilu_round_trip_via_cached_operator(tmp_path):
+    """Acceptance: an L-then-L^T ILU-style round trip through the cached
+    operator — solve L y = b, then L^T z = y, vs the dense reference."""
+    L = generators.lung2_like(scale=0.03)
+    b = np.random.default_rng(5).standard_normal(L.n_rows)
+    op_f = TriangularOperator.from_csr(L, tune="avgLevelCost", chunk=64,
+                                       max_deps=8, cache_dir=tmp_path)
+    op_b = op_f.transposed()
+    assert op_b.transpose and op_b.side == "lower"
+    y = op_f.solve(b)
+    z = op_b.solve(y)
+    dense = L.to_dense()
+    z_ref = np.linalg.solve(dense.T, np.linalg.solve(dense, b))
+    assert _rel_err(z, z_ref) < 1e-8
+    # the pair round-trips the cache: rebuilding both is a disk/memory hit
+    op_f2 = TriangularOperator.from_csr(L, tune="avgLevelCost", chunk=64,
+                                        max_deps=8, cache_dir=tmp_path)
+    op_b2 = op_f2.transposed()
+    assert op_f2.stats.cache_source in ("memory", "disk")
+    assert op_b2.stats.cache_source in ("memory", "disk")
+    assert _rel_err(op_b2.solve(op_f2.solve(b)), z_ref) < 1e-8
+
+
+def test_upper_solve_refines_to_float64():
+    """Refinement residuals use the transpose-aware matvec, so non-forward
+    sweeps reach float64 accuracy too (not just raw device f32)."""
+    L = generators.banded(70, 9, seed=2)
+    U = L.transpose()
+    b = np.random.default_rng(6).standard_normal(70)
+    op = TriangularOperator.from_csr(U, tune="no_rewriting", side="upper",
+                                     chunk=32, max_deps=4, cache=False)
+    x = op.solve(b)
+    assert op.stats.last_residual < 1e-10
+    x_ref = np.linalg.solve(U.to_dense(), b)
+    assert _rel_err(x, x_ref) < 1e-8
+
+
+def test_grad_matches_finite_differences():
+    """Acceptance: jax.grad of sum(sptrsv(L, b)) w.r.t. b matches finite
+    differences to <= 1e-4."""
+    import jax
+    import jax.numpy as jnp
+    n = 50
+    L = generators.random_lower(n, avg_offdiag=2.0, seed=11, max_back=8)
+    b = np.random.default_rng(7).standard_normal(n)
+
+    g = jax.grad(lambda bb: jnp.sum(sptrsv(L, bb, cache=False)))(
+        jnp.asarray(b, jnp.float32))
+    g = np.asarray(g, dtype=np.float64)
+
+    h = 1e-5
+    fd = np.zeros(n)
+    for i in range(n):
+        e = np.zeros(n)
+        e[i] = h
+        fd[i] = (np.sum(sptrsv(L, b + e, cache=False)) -
+                 np.sum(sptrsv(L, b - e, cache=False))) / (2 * h)
+    assert _rel_err(g, fd) < 1e-4
+    # and the analytic cotangent is the transpose solve: L^-T @ ones
+    g_ref = np.linalg.solve(L.to_dense().T, np.ones(n))
+    assert _rel_err(g, g_ref) < 1e-4
+
+
+def test_grad_through_transpose_and_upper_sweeps():
+    """The backward pass of a transpose solve is the forward solve (the
+    VJP flips the transpose bit both ways)."""
+    import jax
+    import jax.numpy as jnp
+    n = 40
+    L = generators.random_lower(n, avg_offdiag=2.0, seed=13, max_back=6)
+    b = np.random.default_rng(8).standard_normal(n)
+    g = jax.grad(lambda bb: jnp.sum(sptrsv(L, bb, transpose=True,
+                                           cache=False)))(
+        jnp.asarray(b, jnp.float32))
+    g_ref = np.linalg.solve(L.to_dense(), np.ones(n))       # (L^T)^-T = L^-1
+    assert _rel_err(np.asarray(g, np.float64), g_ref) < 1e-4
+
+
+def test_second_order_grad_composes():
+    """The custom VJP's backward pass routes through the custom_vjp'd solve
+    itself, so grad-of-grad (HVPs, double backward) works: for
+    f(b) = sum(sptrsv(L, b)^2)/2, grad f = L^-T L^-1 b is linear in b, so
+    grad of (v . grad f) w.r.t. b is the constant L^-T L^-1 v."""
+    import jax
+    import jax.numpy as jnp
+    n = 30
+    L = generators.random_lower(n, avg_offdiag=2.0, seed=17, max_back=5)
+    b = np.random.default_rng(11).standard_normal(n)
+    v = np.random.default_rng(12).standard_normal(n)
+
+    def f(bb):
+        x = sptrsv(L, bb, cache=False)
+        return 0.5 * jnp.sum(x * x)
+
+    hvp = jax.grad(lambda bb: jnp.vdot(jax.grad(f)(bb),
+                                       jnp.asarray(v, jnp.float32)))(
+        jnp.asarray(b, jnp.float32))
+    dense = L.to_dense()
+    hvp_ref = np.linalg.solve(dense.T, np.linalg.solve(dense, v))
+    assert _rel_err(np.asarray(hvp, np.float64), hvp_ref) < 1e-4
+
+
+def test_sptrsv_jit_and_jax_array_roundtrip():
+    import jax
+    import jax.numpy as jnp
+    n = 60
+    L = generators.random_lower(n, avg_offdiag=2.0, seed=15, max_back=9)
+    b = np.random.default_rng(9).standard_normal(n)
+    x_np = sptrsv(L, b, cache=False)
+    assert isinstance(x_np, np.ndarray)                     # numpy in/out
+    x_j = jax.jit(lambda bb: sptrsv(L, bb, cache=False))(
+        jnp.asarray(b, jnp.float32))
+    assert isinstance(x_j, jax.Array)                       # jax in/out
+    assert _rel_err(np.asarray(x_j, np.float64), x_np) < 1e-5
+
+
+def test_sptrsv_tune_and_engine_specs():
+    from repro.solver import resolve_engine
+    L = generators.lung2_like(scale=0.02)
+    b = np.random.default_rng(10).standard_normal(L.n_rows)
+    x_ref = _ref_solve(L, b, True, False)
+    x = sptrsv(L, b, tune="avgLevelCost", engine=resolve_engine("unrolled"),
+               chunk=64, max_deps=8, cache=False)
+    assert _rel_err(x, x_ref) < 1e-8
+    with pytest.raises(ValueError, match="registered engines"):
+        sptrsv(L, b, engine="not-an-engine", cache=False)
+    with pytest.raises(ValueError, match="side"):
+        TriangularOperator.from_csr(L, tune="no_rewriting", side="diagonal",
+                                    cache=False)

@@ -1,0 +1,75 @@
+"""CSR container: materialized transpose, transpose-aware matvec, and the
+reversal permutation backing upper/transpose solves (ISSUE 3 satellites)."""
+import numpy as np
+from _optional_deps import given, settings, st
+
+from repro.sparse import generators
+from repro.sparse.csr import CSR, from_coo, reverse_both, tril, triu
+
+
+def _random_rect(n_rows, n_cols, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n_rows, n_cols)) < density
+    rows, cols = np.nonzero(mask)
+    vals = rng.standard_normal(rows.size)
+    return from_coo(rows, cols, vals, (n_rows, n_cols), sum_duplicates=False)
+
+
+def test_transpose_matches_dense():
+    for seed in range(3):
+        A = _random_rect(40, 25, 0.15, seed)
+        At = A.transpose()
+        assert At.shape == (25, 40)
+        np.testing.assert_array_equal(At.to_dense(), A.to_dense().T)
+        At.check()                          # valid, sorted, duplicate-free
+        # involution
+        np.testing.assert_array_equal(At.transpose().to_dense(),
+                                      A.to_dense())
+
+
+@given(st.integers(5, 60), st.integers(0, 10**5))
+@settings(max_examples=20, deadline=None)
+def test_transpose_property(n, seed):
+    L = generators.random_lower(n, avg_offdiag=2.0, seed=seed, max_back=10)
+    np.testing.assert_array_equal(L.transpose().to_dense(), L.to_dense().T)
+
+
+def test_matvec_transpose_vector_and_batched():
+    A = _random_rect(30, 22, 0.2, 3)
+    x = np.random.default_rng(0).standard_normal(30)
+    X = np.random.default_rng(1).standard_normal((30, 4))
+    np.testing.assert_allclose(A.matvec(x, transpose=True),
+                               A.to_dense().T @ x, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(A.matvec(X, transpose=True),
+                               A.to_dense().T @ X, rtol=1e-12, atol=1e-12)
+    # forward path unchanged
+    y = np.random.default_rng(2).standard_normal(22)
+    np.testing.assert_allclose(A.matvec(y), A.to_dense() @ y,
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_matvec_transpose_equals_transposed_matvec():
+    L = generators.banded(50, 7, seed=5)
+    x = np.random.default_rng(3).standard_normal(50)
+    np.testing.assert_allclose(L.matvec(x, transpose=True),
+                               L.transpose().matvec(x),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_reverse_both_matches_dense():
+    L = generators.random_lower(35, avg_offdiag=2.0, seed=6, max_back=8)
+    U = L.transpose()
+    R = reverse_both(U)
+    np.testing.assert_array_equal(R.to_dense(), U.to_dense()[::-1, ::-1])
+    # reversing an upper-triangular matrix yields a lower-triangular one
+    assert np.allclose(np.triu(R.to_dense(), 1), 0.0)
+    R.check()
+
+
+def test_triu_mirrors_tril():
+    A = _random_rect(20, 20, 0.3, 7)
+    d = A.to_dense()
+    np.testing.assert_array_equal(triu(A).to_dense(), np.triu(d))
+    np.testing.assert_array_equal(triu(A, keep_diagonal=False).to_dense(),
+                                  np.triu(d, 1))
+    np.testing.assert_array_equal(tril(A).to_dense(), np.tril(d))

@@ -160,6 +160,94 @@ def test_solve_stats_and_validation(lung_small, tmp_path):
         op.solve(np.zeros((L.n_rows, 2, 2)))
 
 
+def _disk_cache_file(tmp_path):
+    files = list(tmp_path.glob("op-*.pkl"))
+    assert len(files) == 1
+    return files[0]
+
+
+def test_corrupt_disk_cache_rebuilds(lung_small, tmp_path):
+    """Corrupt/truncated pickle entries fall back to a clean rebuild
+    instead of raising (ISSUE 3 satellite)."""
+    L = lung_small
+    kw = dict(tune="no_rewriting", chunk=128, max_deps=8, cache_dir=tmp_path)
+    op1 = TriangularOperator.from_csr(L, **kw)
+    assert op1.stats.cache_source == "built"
+    path = _disk_cache_file(tmp_path)
+
+    # garbage bytes
+    path.write_bytes(b"this is not a pickle")
+    TriangularOperator.clear_memory_cache()
+    op2 = TriangularOperator.from_csr(L, **kw)
+    assert op2.stats.cache_source == "built"        # rebuilt, no raise
+
+    # truncated but pickle-prefixed entry (rewritten by the rebuild above)
+    raw = path.read_bytes()
+    path.write_bytes(raw[: max(1, len(raw) // 3)])
+    TriangularOperator.clear_memory_cache()
+    op3 = TriangularOperator.from_csr(L, **kw)
+    assert op3.stats.cache_source == "built"
+    b = np.random.default_rng(7).standard_normal(L.n_rows)
+    assert _rel_err(op3.solve(b), solve_csr_seq(L, b)) < 1e-8
+
+
+def test_cache_version_bump_rebuilds(lung_small, tmp_path):
+    """A payload written under a different CACHE_VERSION is ignored (clean
+    rebuild), never deserialized into a live operator."""
+    import pickle
+    L = lung_small
+    kw = dict(tune="no_rewriting", chunk=128, max_deps=8, cache_dir=tmp_path)
+    TriangularOperator.from_csr(L, **kw)
+    path = _disk_cache_file(tmp_path)
+    payload = pickle.loads(path.read_bytes())
+    payload["version"] = payload["version"] - 1     # stale-format entry
+    path.write_bytes(pickle.dumps(payload))
+    TriangularOperator.clear_memory_cache()
+    op = TriangularOperator.from_csr(L, **kw)
+    assert op.stats.cache_source == "built"
+
+
+def test_engine_is_not_in_cache_key(lung_small, tmp_path):
+    """The compiled artifact is engine-independent: switching engines on
+    the same matrix is a cache hit, and each operator still honors its own
+    engine choice.  (With measured re-ranking the engine IS keyed, since
+    the tuner's pick then depends on it.)"""
+    L = lung_small
+    op1 = TriangularOperator.from_csr(L, tune="no_rewriting", chunk=128,
+                                      max_deps=8, cache_dir=tmp_path)
+    op2 = TriangularOperator.from_csr(L, tune="no_rewriting", chunk=128,
+                                      max_deps=8, cache_dir=tmp_path,
+                                      engine="pallas-interpret")
+    assert op1.stats.cache_source == "built"
+    assert op2.stats.cache_source == "memory"       # no rebuild
+    assert op1.engine == "scan" and op2.engine == "pallas-interpret"
+    assert len(list(tmp_path.glob("op-*.pkl"))) == 1
+    b = np.random.default_rng(8).standard_normal(L.n_rows)
+    assert _rel_err(op2.solve(b), solve_csr_seq(L, b)) < 1e-8
+
+
+def test_orientation_bits_in_cache_key(lung_small, tmp_path):
+    """side/transpose are part of the fingerprint key: all four sweeps of
+    one matrix coexist on disk and none collides (ISSUE 3 satellite)."""
+    L = lung_small
+    built = []
+    for side, transpose in (("lower", False), ("lower", True),
+                            ("upper", False), ("upper", True)):
+        A = L if side == "lower" else L.transpose()
+        op = TriangularOperator.from_csr(A, tune="no_rewriting", side=side,
+                                         transpose=transpose, chunk=128,
+                                         max_deps=8, cache_dir=tmp_path)
+        built.append(op.stats.cache_source)
+    assert built == ["built"] * 4
+    # lower/upper pairs share the matrix only pairwise -> 4 distinct keys
+    assert len(list(tmp_path.glob("op-*.pkl"))) == 4
+    # same orientation again: cache hit, not a rebuild
+    op = TriangularOperator.from_csr(L, tune="no_rewriting", side="lower",
+                                     transpose=True, chunk=128, max_deps=8,
+                                     cache_dir=tmp_path)
+    assert op.stats.cache_source == "memory"
+
+
 def test_no_refine_is_device_precision(lung_small):
     """max_refine=0 returns the raw float32 device solve (~1e-5), while the
     default refinement buys back float64 (~1e-10) — the contract the

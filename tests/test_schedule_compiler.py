@@ -22,7 +22,7 @@ from repro.sparse.csr import tril
 
 
 def _check(L, chunk, max_deps, compact, widths=(4, 8, 16, 32),
-           engine="scan", rtol=2e-5):
+           engine=None, rtol=2e-5):
     lv = build_levels(L)
     b = np.random.default_rng(0).standard_normal(L.n_rows)
     x_ref = solve_csr_seq(L, b)

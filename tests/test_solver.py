@@ -5,13 +5,14 @@ import pytest
 from _optional_deps import given, settings, st
 
 from repro.core import AvgLevelCost, NoRewrite, transform
-from repro.solver import (schedule_for_csr, schedule_for_transformed, solve,
-                          solve_csr_seq, to_device)
+from repro.solver import (resolve_engine, schedule_for_csr,
+                          schedule_for_transformed, solve, solve_csr_seq,
+                          to_device)
 from repro.solver.levelset import solve_scan, solve_unrolled
 from repro.sparse import build_levels, generators
 
 
-def _solve_and_check(L, chunk, max_deps, engine="scan", rtol=2e-5):
+def _solve_and_check(L, chunk, max_deps, engine=None, rtol=2e-5):
     lv = build_levels(L)
     b = np.random.default_rng(0).standard_normal(L.n_rows)
     x_ref = solve_csr_seq(L, b)
@@ -39,7 +40,7 @@ def test_row_splitting_wide_rows():
 
 def test_unrolled_engine_matches():
     L = generators.random_lower(150, avg_offdiag=2.0, seed=6, max_back=12)
-    _solve_and_check(L, 32, 4, engine="unrolled")
+    _solve_and_check(L, 32, 4, engine=resolve_engine("unrolled"))
 
 
 def test_multi_rhs():
