@@ -11,6 +11,8 @@ Sections:
   solver_bench    — solve wall time (CPU measured + TPU roofline model)
   schedule        — schedule-compiler before/after (BENCH_schedule.json)
   operator        — auto-tuner vs fixed strategies (BENCH_operator.json)
+  iterative       — end-to-end IC(0)-PCG, tuned vs no_rewriting
+                    (BENCH_iterative.json)
 
 --smoke runs every section at reduced scale (seconds, not minutes) so the
 tier-1 suite can import-check and execute the drivers (pytest -m bench).
@@ -85,8 +87,9 @@ def engine_capability_smoke(n: int = 200) -> dict:
     return out
 
 
-def smoke(out_path=None, operator_out=None) -> dict:
+def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
     """Reduced-scale pass over every benchmark driver (tier-1 smoke)."""
+    import benchmarks.iterative_bench as ib
     import benchmarks.level_profiles as lp
     import benchmarks.operator_bench as ob
     import benchmarks.solver_bench as sb
@@ -107,9 +110,12 @@ def smoke(out_path=None, operator_out=None) -> dict:
         sio.load_named = real_load
     ob.run(out_path=operator_out, scales=(0.04, 0.04), iters=1,
            measure_top_k=0)
+    it_rec = ib.run(out_path=iterative_out, scales=(0.02, 0.02), iters=1,
+                    maxiter=200, measure_top_k=2)
     rec = bench_schedule(None, scales=(0.08, 0.06), reps=2,
                          time_solve=False)
     rec["engines"] = engines
+    rec["iterative"] = it_rec
     if out_path:        # persist WITH the engine section (record == file)
         p = Path(out_path)
         p.parent.mkdir(parents=True, exist_ok=True)
@@ -155,6 +161,9 @@ def main() -> None:
     print("\n== Operator auto-tuner vs fixed strategies ==")
     from benchmarks import operator_bench
     operator_bench.run(out_path="experiments/BENCH_operator.json")
+    print("\n== End-to-end IC(0)-PCG: tuned vs no_rewriting ==")
+    from benchmarks import iterative_bench
+    iterative_bench.run(out_path="experiments/BENCH_iterative.json")
     _roofline_summary()
     print(f"\ntotal {time.time() - t0:.1f}s")
 

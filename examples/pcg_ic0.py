@@ -1,87 +1,62 @@
-"""Preconditioned CG with an IC(0)-style triangular preconditioner whose
-solves go through the transformed SpTRSV operator — the paper's §I
-motivation ("building block to preconditioners for sparse iterative
-solvers") end to end.  Both halves of M^-1 = (L L^T)^-1 run through the
-level-scheduled engines: the forward L-sweep via the transformed schedule,
-the backward L^T-sweep via the transpose operator
-(TriangularOperator.from_csr(..., transpose=True)).
+"""Preconditioned CG through the full subsystem — the paper's §I motivation
+("building block to preconditioners for sparse iterative solvers") end to
+end, with zero hand-rolled solver code:
+
+    A = poisson2d_spd(nx, ny)            # the user's SPD system
+    P = Preconditioner.ic0(A, tune=...)  # numeric IC(0) + pair-tuned,
+                                         #   cached TriangularOperators
+    res = iterative.cg(A, b, preconditioner=P)
+
+Both halves of M^-1 = (L L^T)^-1 run as ONE traceable device computation
+(compiled T-factor preamble + width-bucketed schedule per sweep, forward L
+and backward L^T via transpose=True), and the CG loop itself is a pure JAX
+program — jit the whole solve if you like.  Compare the iteration counts
+against unpreconditioned CG, and the schedule shapes across strategies.
 
     PYTHONPATH=src python examples/pcg_ic0.py
 """
 import numpy as np
+from jax.experimental import enable_x64
 
-from repro.core import AvgLevelCost, NoRewrite, transform
-from repro.solver import (TriangularOperator, resolve_engine,
-                          schedule_for_transformed, to_device)
+from repro.iterative import cg
+from repro.precond import Preconditioner
 from repro.sparse import generators
-from repro.sparse.csr import CSR, from_coo
-
-
-def spd_from_grid(nx: int, ny: int, seed=0):
-    """SPD matrix A = L L^T from a Poisson-like lower factor."""
-    L = generators.poisson2d_ic0(nx, ny, seed=seed)
-    n = L.n_rows
-    dense = L.to_dense()
-    A = dense @ dense.T
-    return L, A
-
-
-def pcg(A, b, Lfac, ts, iters=80, tol=1e-8):
-    """CG on Ax=b, preconditioner M^-1 = (L L^T)^-1 via two triangular
-    solves — the forward sweep through the transformed level-scheduled
-    engine, the backward L^T sweep through the transpose operator (same
-    compiler and engines), both compiled once outside the loop."""
-    import jax.numpy as jnp
-
-    sched = schedule_for_transformed(ts, chunk=128, max_deps=8,
-                                     dtype=np.float64)
-    ds = to_device(sched)
-    fwd = resolve_engine("scan").compile(ds)
-    bwd = TriangularOperator.from_csr(Lfac, tune="no_rewriting",
-                                      transpose=True, chunk=128, max_deps=8,
-                                      cache=False)
-
-    def apply_minv(r):
-        c = ts.preamble(r)
-        y = np.asarray(fwd(jnp.asarray(c, jnp.float32))).astype(np.float64)
-        return bwd.solve(y)
-
-    x = np.zeros_like(b)
-    r = b - A @ x
-    z = apply_minv(r)
-    p = z.copy()
-    rz = r @ z
-    for it in range(iters):
-        Ap = A @ p
-        alpha = rz / (p @ Ap)
-        x += alpha * p
-        r -= alpha * Ap
-        rn = np.linalg.norm(r)
-        if rn < tol:
-            return x, it + 1, rn
-        z = apply_minv(r)
-        rz_new = r @ z
-        p = z + (rz_new / rz) * p
-        rz = rz_new
-    return x, iters, np.linalg.norm(r)
 
 
 def main():
-    Lfac, A = spd_from_grid(24, 24)
-    n = A.shape[0]
+    A = generators.poisson2d_spd(24, 24)
+    n = A.n_rows
     rng = np.random.default_rng(0)
     x_true = rng.standard_normal(n)
-    b = A @ x_true
+    b = A.matvec(x_true)
 
-    for name, strat in (("no_rewriting", NoRewrite()),
-                        ("avgLevelCost", AvgLevelCost())):
-        ts = transform(Lfac, strat, validate=False, codegen=False)
-        x, iters, rn = pcg(A, b, Lfac, ts)
-        err = np.abs(x - x_true).max()
-        sched = schedule_for_transformed(ts, chunk=128, max_deps=8)
-        print(f"{name:14s} levels={ts.metrics.num_levels_after:4d} "
-              f"sched_steps={sched.num_steps:4d} cg_iters={iters:3d} "
-              f"resid={rn:.2e} err={err:.2e}")
+    with enable_x64():      # float64 outer iterations (M^-1 runs float32)
+        import jax.numpy as jnp
+        bj = jnp.asarray(b)
+
+        base = cg(A, bj, tol=1e-8)
+        print(f"{'unpreconditioned':>16s}  cg_iters={int(base.iterations):3d} "
+              f"resid={float(base.final_residual()):.2e}")
+
+        for tune in ("no_rewriting", "avgLevelCost", "auto"):
+            P = Preconditioner.ic0(A, tune=tune)
+            res = cg(A, bj, preconditioner=P, tol=1e-8)
+            err = float(jnp.abs(res.x - x_true).max())
+            sched = P.forward.schedule
+            label = P.strategy if tune == "auto" else tune
+            print(f"{tune:>16s}  cg_iters={int(res.iterations):3d} "
+                  f"resid={float(res.final_residual()):.2e} err={err:.2e} "
+                  f"sched_steps={sched.num_steps:3d} pick={label}")
+            assert bool(res.converged), tune
+            assert int(res.iterations) < int(base.iterations), \
+                f"{tune}: preconditioning must cut iterations"
+
+        # batched right-hand sides stream the same schedules once per step
+        B = jnp.asarray(rng.standard_normal((n, 8)))
+        P = Preconditioner.ic0(A, tune="auto")
+        resb = cg(A, B, preconditioner=P, tol=1e-8)
+        print(f"{'batched k=8':>16s}  cg_iters={np.asarray(resb.iterations)} "
+              f"all_converged={bool(resb.converged.all())}")
 
 
 if __name__ == "__main__":

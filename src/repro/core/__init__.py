@@ -11,7 +11,7 @@ from .strategies import (AvgLevelCost, ConstrainedAvgLevelCost,
                          strategy_label)
 from .transform import TransformMetrics, TransformedSystem, transform
 from .codegen import generate_c_source, generated_code_bytes
-from .portfolio import (PortfolioCandidate, PortfolioReport,
+from .portfolio import (PairReport, PortfolioCandidate, PortfolioReport,
                         StrategyPortfolio, default_candidates, make_strategy)
 from .portfolio import CostModel as TuningCostModel
 
@@ -22,5 +22,5 @@ __all__ = [
     "TransformMetrics", "TransformedSystem", "transform",
     "generate_c_source", "generated_code_bytes",
     "StrategyPortfolio", "PortfolioCandidate", "PortfolioReport",
-    "TuningCostModel", "default_candidates", "make_strategy",
+    "PairReport", "TuningCostModel", "default_candidates", "make_strategy",
 ]

@@ -39,8 +39,8 @@ from .strategies import (AvgLevelCost, ConstrainedAvgLevelCost,
 from .transform import TransformMetrics, TransformedSystem, transform
 
 __all__ = ["CostModel", "PortfolioCandidate", "PortfolioReport",
-           "StrategyPortfolio", "default_candidates", "make_strategy",
-           "STRATEGY_REGISTRY"]
+           "PairReport", "StrategyPortfolio", "default_candidates",
+           "make_strategy", "STRATEGY_REGISTRY"]
 
 # stable strategy name -> zero-arg-constructible class (docs/strategies.md)
 STRATEGY_REGISTRY = {
@@ -184,6 +184,55 @@ class PortfolioReport:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass
+class PairReport:
+    """Joint tuning decision for a forward/backward triangular-operator pair.
+
+    A preconditioner application M^-1 r is TWO sweeps back to back (L then
+    L^T, or L then U), and the strategy is chosen ONCE for the pair: per
+    candidate label, the pair cost is the sum of the per-side costs, and
+    `best_label` minimizes that sum.  Ranking mirrors `tune()`'s contract —
+    labels measured on BOTH sides rank first by measured sum; the rest
+    follow by predicted sum (never interleaved: wall-clock and model cost
+    are different scales).
+
+    `fwd`/`bwd` keep the full per-side PortfolioReports, so per-sweep
+    diagnostics (steps, padded FLOPs, nnz_T) stay inspectable.
+    """
+
+    fwd: PortfolioReport
+    bwd: PortfolioReport
+    combined: list                  # [{label, fwd_us, bwd_us, total_us,
+    #                                  measured}] ranked, [0] is the pick
+    best_label: str
+
+    @property
+    def tune_ms(self) -> float:
+        return self.fwd.tune_ms + self.bwd.tune_ms
+
+    def slim(self) -> "PairReport":
+        return dataclasses.replace(self, fwd=self.fwd.slim(),
+                                   bwd=self.bwd.slim())
+
+    def to_dict(self) -> dict:
+        return {
+            "best_label": self.best_label,
+            "combined": self.combined,
+            "fwd": self.fwd.to_dict(),
+            "bwd": self.bwd.to_dict(),
+        }
+
+    def table(self) -> str:
+        hdr = (f"{'rank':>4}  {'strategy':<42} {'fwd_us':>10} "
+               f"{'bwd_us':>10} {'pair_us':>10} {'scored':>9}")
+        lines = [hdr, "-" * len(hdr)]
+        for i, c in enumerate(self.combined):
+            lines.append(f"{i:>4}  {c['label']:<42} {c['fwd_us']:>10.1f} "
+                         f"{c['bwd_us']:>10.1f} {c['total_us']:>10.1f} "
+                         f"{'measured' if c['measured'] else 'model':>9}")
+        return "\n".join(lines)
+
+
 def default_candidates() -> list:
     """The shipped portfolio: the four strategies plus parameter sweeps over
     ManualEveryK / ConstrainedAvgLevelCost / CriticalPathRewrite."""
@@ -279,6 +328,39 @@ class StrategyPortfolio:
             measured_top_k=self.measure_top_k,
             tune_ms=(time.perf_counter() - t0) * 1e3)
         return report
+
+    def tune_pair(self, fwd: CSR, bwd: CSR) -> PairReport:
+        """Tune a forward/backward operator pair jointly (see PairReport).
+
+        `fwd` and `bwd` are the two ORIENTED lower-triangular systems of a
+        preconditioner's sweeps (repro.solver.operator.orient_lower output
+        for the L and L^T/U halves).  Each side runs the normal `tune()`;
+        the pick minimizes the summed pair cost over labels that succeeded
+        on both sides.
+        """
+        rf, rb = self.tune(fwd), self.tune(bwd)
+
+        def _by_label(report):
+            return {c.label: c for c in report.candidates if c.error is None}
+
+        cf, cb = _by_label(rf), _by_label(rb)
+        shared = [lbl for lbl in cf if lbl in cb]
+        if not shared:
+            raise RuntimeError("no strategy succeeded on both sides of the "
+                               "operator pair")
+        combined = []
+        for lbl in shared:
+            f, b = cf[lbl], cb[lbl]
+            measured = f.measured_us is not None and b.measured_us is not None
+            fwd_us = f.measured_us if measured else f.predicted_us
+            bwd_us = b.measured_us if measured else b.predicted_us
+            combined.append({"label": lbl, "fwd_us": round(fwd_us, 1),
+                             "bwd_us": round(bwd_us, 1),
+                             "total_us": round(fwd_us + bwd_us, 1),
+                             "measured": measured})
+        combined.sort(key=lambda c: (not c["measured"], c["total_us"]))
+        return PairReport(fwd=rf, bwd=rb, combined=combined,
+                          best_label=combined[0]["label"])
 
     def _measure(self, cand: PortfolioCandidate) -> float:
         """End-to-end per-solve wall time (host preamble + compiled engine),

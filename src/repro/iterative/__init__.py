@@ -1,0 +1,25 @@
+"""Iterative-solver subsystem: jit-native Krylov drivers.
+
+The consumer side of the preconditioning pipeline — `cg`, `bicgstab`, and
+restarted `gmres` over any `(matvec, preconditioner)` pair, with the
+paper's transformed SpTRSV serving as the preconditioner kernel:
+
+    from repro.iterative import cg
+    from repro.precond import Preconditioner
+
+    P = Preconditioner.ic0(A, tune="auto")
+    res = cg(A, b, preconditioner=P, tol=1e-8)       # b: (n,) or (n, k)
+
+All drivers are pure JAX programs (jit/vmap-composable, early exit via
+lax.while_loop) returning a `SolveResult` pytree with per-iteration
+residual history.  See docs/iterative.md for the factor -> tune -> solve
+walkthrough and convergence knobs.
+"""
+from .krylov import SolveResult, bicgstab, cg, gmres
+from .operators import (as_matvec, as_preconditioner, device_matvec,
+                        solve_callback)
+
+__all__ = [
+    "SolveResult", "cg", "bicgstab", "gmres",
+    "as_matvec", "as_preconditioner", "device_matvec", "solve_callback",
+]

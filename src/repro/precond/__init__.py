@@ -1,0 +1,22 @@
+"""Preconditioning subsystem: numeric incomplete factorization + facade.
+
+The producer side of the paper's motivating scenario — triangular factors
+for "preconditioners to sparse iterative solvers" — factored from the
+user's matrix and wired into the transformed-SpTRSV operator pipeline:
+
+    from repro.precond import Preconditioner, ic0, ilu0
+
+    P = Preconditioner.ic0(A)        # factor + pair-tune + cached operators
+    z = P(r)                         # z = M^-1 r (numpy or JAX, jit-safe)
+
+`ic0`/`ilu0` alone return the raw factors (FactorResult) for callers that
+manage their own operators.  The consumer side lives in `repro.iterative`
+(jit-native Krylov drivers); docs/iterative.md walks the full pipeline.
+"""
+from .api import IdentityPreconditioner, Preconditioner
+from .factorize import FactorResult, FactorizationBreakdown, ic0, ilu0
+
+__all__ = [
+    "Preconditioner", "IdentityPreconditioner",
+    "FactorResult", "FactorizationBreakdown", "ic0", "ilu0",
+]

@@ -55,7 +55,7 @@ import numpy as np
 from ..sparse.csr import CSR, reverse_both
 
 __all__ = ["TriangularOperator", "OperatorStats", "matrix_fingerprint",
-           "default_cache_dir", "orient_lower"]
+           "default_cache_dir", "orient_lower", "compose_sweep_fn"]
 
 CACHE_VERSION = 2
 
@@ -86,6 +86,35 @@ def orient_lower(A: CSR, side: str, transpose: bool) -> tuple:
     if lower:                       # lower, transpose
         return reverse_both(A.transpose()), True
     return reverse_both(A), True    # upper, no transpose
+
+
+def compose_sweep_fn(main_fn, schedule_dtype, pre_fn, src, row_pos,
+                     reversed_: bool):
+    """Compose one triangular sweep as a pure JAX callable: axis reversal
+    (transpose/upper orientations) -> T-factor preamble -> main schedule
+    -> un-reverse, in the schedule dtype, cast back to the input's dtype.
+
+    The ONE definition of the served device pipeline: both
+    `TriangularOperator.device_solve_fn` (production applications) and
+    `Preconditioner._measure_pair` (measured pair tuning) build on it, so
+    the tuner always times exactly the computation it selects for.
+    `pre_fn`/`src`/`row_pos` are None for identity preambles.
+    """
+    import jax.numpy as jnp
+
+    def fn(v):
+        out_dtype = v.dtype
+        c = jnp.asarray(v, dtype=schedule_dtype)
+        if reversed_:
+            c = jnp.flip(c, axis=0)
+        if pre_fn is not None:
+            c = pre_fn(c[src])[row_pos]
+        x = main_fn(c)
+        if reversed_:
+            x = jnp.flip(x, axis=0)
+        return x.astype(out_dtype)
+
+    return fn
 
 
 def default_cache_dir() -> Path:
@@ -159,6 +188,7 @@ class TriangularOperator:
         self.report = payload.get("report")        # slim PortfolioReport|None
         self.strategy = payload["strategy"]        # winning strategy label
         cfg = payload["config"]
+        self._config = cfg
         self.side = cfg.get("side", "lower")
         self.transpose = bool(cfg.get("transpose", False))
         # recorded by orient_lower at build time (single source of truth
@@ -366,21 +396,84 @@ class TriangularOperator:
     def _staged(self):
         ds = self._runtime.get("dsched")
         if ds is None:
+            import jax
             from .levelset import to_device
-            ds = self._runtime["dsched"] = to_device(self._sched)
+            # staging may be triggered lazily from INSIDE a jit trace (an
+            # operator first used as a traced preconditioner); the staged
+            # arrays are cached on the shared payload, so they must be
+            # concrete, never tracers
+            with jax.ensure_compile_time_eval():
+                ds = self._runtime["dsched"] = to_device(self._sched)
         return ds
+
+    def _compiled_fn(self, engine):
+        """engine -> compiled schedule fn, cached on the shared payload."""
+        cached = self._runtime["compiled"].get(engine.name)
+        if cached is not None and cached[0] is engine:
+            return cached[1]
+        fn = engine.compile(self._staged())
+        self._runtime["compiled"][engine.name] = (engine, fn)
+        return fn
 
     def _device_solve(self, c: np.ndarray, engine) -> np.ndarray:
         """One schedule execution in the schedule dtype."""
         import jax.numpy as jnp
         ds = self._staged()      # staged once, shared via the payload cache
-        cached = self._runtime["compiled"].get(engine.name)
-        if cached is not None and cached[0] is engine:
-            fn = cached[1]
-        else:
-            fn = engine.compile(ds)
-            self._runtime["compiled"][engine.name] = (engine, fn)
-        return np.asarray(fn(jnp.asarray(c, dtype=ds.dtype)))
+        return np.asarray(self._compiled_fn(engine)(
+            jnp.asarray(c, dtype=ds.dtype)))
+
+    def _preamble_staged(self):
+        """(DeviceSchedule|None, src, row_pos) for the T-factor preamble,
+        staged once on the shared payload (None = identity preamble)."""
+        entry = self._runtime.get("preamble")
+        if entry is None:
+            import jax
+            from .levelset import to_device
+            from .schedule import schedule_for_preamble
+            psched, src, row_pos = schedule_for_preamble(
+                self._ts, chunk=self._config.get("chunk", 256),
+                max_deps=self._config.get("max_deps", 16),
+                dtype=np.dtype(self._config.get("dtype", "float32")))
+            with jax.ensure_compile_time_eval():    # see _staged
+                entry = ((to_device(psched) if psched is not None else None),
+                         src, row_pos)
+            self._runtime["preamble"] = entry
+        return entry
+
+    def device_solve_fn(self, engine=None):
+        """The operator's sweep as a pure JAX callable — jit/while_loop
+        composable, no host callbacks.
+
+        Returns fn(v) -> x for v of shape (n,) or (n, k): axis reversal
+        (transpose/upper sweeps), the T-factor preamble (compiled through
+        the SAME level-scheduled engines via schedule_for_preamble), and
+        the main schedule all run on device in the schedule dtype; the
+        result is cast back to v's dtype.  No float64 iterative
+        refinement — this is the raw device pipeline, which is exactly
+        what preconditioner applications inside jit-native Krylov loops
+        want (M^-1 is approximate by construction; see
+        repro.iterative/docs/iterative.md).
+        """
+        from .engines import resolve_engine
+        eng = self._engine if engine is None else resolve_engine(engine)
+        if eng is None:
+            raise ValueError(
+                "operator has no resolvable default engine "
+                f"({self._engine_name!r}); pass engine= explicitly")
+        ds = self._staged()
+        main_fn = self._compiled_fn(eng)
+        pre_ds, src, row_pos = self._preamble_staged()
+        pre_fn = None
+        if pre_ds is not None:
+            pre_compiled = self._runtime.setdefault("pre_compiled", {})
+            cached = pre_compiled.get(eng.name)
+            if cached is not None and cached[0] is eng:
+                pre_fn = cached[1]
+            else:
+                pre_fn = eng.compile(pre_ds)
+                pre_compiled[eng.name] = (eng, pre_fn)
+        return compose_sweep_fn(main_fn, ds.dtype, pre_fn, src, row_pos,
+                                self._reversed)
 
     def _oriented_solve(self, v: np.ndarray, engine) -> np.ndarray:
         """Device solve of the oriented system for an original-orientation

@@ -20,6 +20,7 @@ from .csr import CSR, from_coo
 __all__ = [
     "chain", "random_lower", "banded", "poisson2d_ic0",
     "from_level_profile", "lung2_like", "torso2_like", "with_values",
+    "poisson2d_spd", "poisson3d_spd", "random_spd", "spd_from_lower",
 ]
 
 
@@ -248,6 +249,101 @@ def torso2_like(scale: float = 1.0, seed: int = 11) -> CSR:
 
     # mesh locality: FEM neighbours share ancestors (see from_level_profile)
     return from_level_profile(sizes, indeg, dist, seed=seed, locality=0.003)
+
+
+# -- SPD generators (factorization inputs for repro.precond) ------------------
+#
+# The triangular generators above produce *factors*; the preconditioning
+# subsystem needs full SPD (or general square) *systems* to factor.  These
+# return symmetric positive-definite CSR matrices directly, so examples and
+# tests no longer have to assemble A = L @ L.T by hand.
+
+
+def _grid_laplacian(dims: tuple[int, ...]) -> CSR:
+    """(2*ndim)+1-point Laplacian on a regular grid: diag = 2*ndim,
+    nearest-neighbour off-diagonals = -1.  Symmetric, irreducibly
+    diagonally dominant with positive diagonal => SPD."""
+    n = int(np.prod(dims))
+    idx = np.arange(n)
+    coords = []
+    rem = idx
+    for d in dims:                      # x fastest, matching poisson2d_ic0
+        coords.append(rem % d)
+        rem = rem // d
+    rows = [idx]
+    cols = [idx]
+    vals = [np.full(n, 2.0 * len(dims))]
+    stride = 1
+    for axis, d in enumerate(dims):
+        has_prev = idx[coords[axis] > 0]
+        for r, c in ((has_prev, has_prev - stride),
+                     (has_prev - stride, has_prev)):
+            rows.append(r)
+            cols.append(c)
+            vals.append(np.full(r.shape[0], -1.0))
+        stride *= d
+    return from_coo(np.concatenate(rows), np.concatenate(cols),
+                    np.concatenate(vals), (n, n), sum_duplicates=False)
+
+
+def poisson2d_spd(nx: int, ny: int) -> CSR:
+    """5-point Laplacian on an nx*ny grid — the canonical SPD test system
+    (its IC(0) factor has the poisson2d_ic0 sparsity structure)."""
+    return _grid_laplacian((nx, ny))
+
+
+def poisson3d_spd(nx: int, ny: int, nz: int) -> CSR:
+    """7-point Laplacian on an nx*ny*nz grid (SPD)."""
+    return _grid_laplacian((nx, ny, nz))
+
+
+def _spd_from_strict_lower(rows: np.ndarray, cols: np.ndarray, n: int,
+                           rng: np.random.Generator) -> CSR:
+    """Symmetric diagonally-dominant CSR from strict-lower pattern entries.
+
+    Mirrors the entries, draws one value per unordered pair, then sets
+    diag[i] = sum_j |offdiag[i, j]| + U(1, 2): symmetric + strictly
+    diagonally dominant + positive diagonal => positive definite.
+    """
+    vals = rng.uniform(-1.0, 1.0, size=rows.shape[0])
+    r = np.concatenate([rows, cols, np.arange(n)])
+    c = np.concatenate([cols, rows, np.arange(n)])
+    v = np.concatenate([vals, vals, np.zeros(n)])
+    abssum = np.zeros(n)
+    np.add.at(abssum, rows, np.abs(vals))
+    np.add.at(abssum, cols, np.abs(vals))
+    v[-n:] = abssum + rng.uniform(1.0, 2.0, n)
+    return from_coo(r, c, v, (n, n), sum_duplicates=True)
+
+
+def random_spd(n: int, avg_offdiag: float = 3.0, seed: int = 0,
+               max_back: int | None = None) -> CSR:
+    """Random sparse SPD matrix (~avg_offdiag strict-lower nnz per row).
+
+    Diagonally dominant by construction, so both `ic0` and `ilu0` factor it
+    without breakdown; `max_back` bounds the bandwidth like random_lower.
+    """
+    rng = np.random.default_rng(seed)
+    pat = random_lower(n, avg_offdiag=avg_offdiag, seed=seed,
+                       max_back=max_back)
+    prows = np.repeat(np.arange(n), pat.row_nnz())
+    strict = pat.indices < prows
+    return _spd_from_strict_lower(prows[strict], pat.indices[strict], n, rng)
+
+
+def spd_from_lower(L: CSR, seed: int = 0) -> CSR:
+    """SPD matrix whose strict-lower pattern equals L's strict-lower pattern.
+
+    tril(A) then has exactly L's sparsity, so IC(0) factors of A inherit the
+    level/dependency structure of the benchmark analogues (lung2_like,
+    torso2_like) — the bridge from "triangular-factor generator" to
+    "end-to-end preconditioned-solver benchmark".
+    """
+    rng = np.random.default_rng(seed)
+    rows = np.repeat(np.arange(L.n_rows), L.row_nnz())
+    strict = L.indices < rows
+    return _spd_from_strict_lower(rows[strict], L.indices[strict],
+                                  L.n_rows, rng)
 
 
 def with_values(m: CSR, seed: int = 0) -> CSR:

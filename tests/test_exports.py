@@ -1,0 +1,65 @@
+"""Public-surface regression: every repro package's __all__ resolves.
+
+The PR 2 `strategies.py` fix established the contract that `__all__` is
+the package's real surface — every listed name importable, no duplicates,
+no stale entries.  This test enforces it across ALL repro packages (the
+new precond/iterative subsystems included), so export drift fails fast
+instead of surfacing as a user-facing AttributeError.
+"""
+import importlib
+
+import pytest
+
+PACKAGES = [
+    "repro.core",
+    "repro.core.portfolio",
+    "repro.core.strategies",
+    "repro.sparse",
+    "repro.sparse.csr",
+    "repro.sparse.generators",
+    "repro.sparse.levels",
+    "repro.solver",
+    "repro.solver.engines",
+    "repro.solver.operator",
+    "repro.solver.api",
+    "repro.precond",
+    "repro.precond.api",
+    "repro.precond.factorize",
+    "repro.iterative",
+    "repro.iterative.krylov",
+    "repro.iterative.operators",
+]
+
+
+@pytest.mark.parametrize("modname", PACKAGES)
+def test_all_names_resolve(modname):
+    mod = importlib.import_module(modname)
+    assert hasattr(mod, "__all__"), f"{modname} must declare __all__"
+    names = mod.__all__
+    assert len(names) == len(set(names)), f"{modname}: duplicate __all__"
+    for name in names:
+        assert hasattr(mod, name), f"{modname}.__all__ lists missing {name}"
+
+
+def test_new_subsystem_surfaces():
+    """The ISSUE 4 surfaces are exported at package level."""
+    import repro.iterative as it
+    import repro.precond as pc
+    from repro.core import portfolio
+    from repro.sparse import generators
+    assert {"Preconditioner", "IdentityPreconditioner", "FactorResult",
+            "FactorizationBreakdown", "ic0", "ilu0"} <= set(pc.__all__)
+    assert {"SolveResult", "cg", "bicgstab", "gmres", "device_matvec",
+            "as_matvec", "as_preconditioner"} <= set(it.__all__)
+    assert {"poisson2d_spd", "poisson3d_spd", "random_spd",
+            "spd_from_lower"} <= set(generators.__all__)
+    assert "PairReport" in portfolio.__all__
+    import repro.core as core
+    assert "PairReport" in core.__all__
+
+
+def test_operator_device_surface():
+    """device_solve_fn is part of the operator's public behavior (used by
+    repro.iterative adapters); guard it against accidental removal."""
+    from repro.solver import TriangularOperator
+    assert callable(getattr(TriangularOperator, "device_solve_fn"))
