@@ -13,6 +13,10 @@ Sections:
   operator        — auto-tuner vs fixed strategies (BENCH_operator.json)
   iterative       — end-to-end IC(0)-PCG, tuned vs no_rewriting
                     (BENCH_iterative.json)
+  distributed     — sharded-engine scaling curve + steps-vs-all_gathers
+                    table (BENCH_distributed.json; full mode runs in a
+                    subprocess with 8 forced host devices, smoke runs
+                    in-process on the available devices)
 
 --smoke runs every section at reduced scale (seconds, not minutes) so the
 tier-1 suite can import-check and execute the drivers (pytest -m bench).
@@ -89,6 +93,7 @@ def engine_capability_smoke(n: int = 200) -> dict:
 
 def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
     """Reduced-scale pass over every benchmark driver (tier-1 smoke)."""
+    import benchmarks.distributed_bench as db
     import benchmarks.iterative_bench as ib
     import benchmarks.level_profiles as lp
     import benchmarks.operator_bench as ob
@@ -98,6 +103,7 @@ def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
     from repro.sparse import io as sio
 
     engines = engine_capability_smoke()
+    distributed = db.smoke_record()
     real_load = sio.load_named
     try:
         sio.load_named = lambda name: (
@@ -116,6 +122,7 @@ def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
                          time_solve=False)
     rec["engines"] = engines
     rec["iterative"] = it_rec
+    rec["distributed_smoke"] = distributed
     if out_path:        # persist WITH the engine section (record == file)
         p = Path(out_path)
         p.parent.mkdir(parents=True, exist_ok=True)
@@ -164,6 +171,10 @@ def main() -> None:
     print("\n== End-to-end IC(0)-PCG: tuned vs no_rewriting ==")
     from benchmarks import iterative_bench
     iterative_bench.run(out_path="experiments/BENCH_iterative.json")
+    print("\n== Sharded scaling curve + steps-vs-all_gathers "
+          "(8 forced host devices, subprocess) ==")
+    from benchmarks import distributed_bench
+    distributed_bench.run(out_path="experiments/BENCH_distributed.json")
     _roofline_summary()
     print(f"\ntotal {time.time() - t0:.1f}s")
 

@@ -40,7 +40,7 @@ from .transform import TransformMetrics, TransformedSystem, transform
 
 __all__ = ["CostModel", "PortfolioCandidate", "PortfolioReport",
            "PairReport", "StrategyPortfolio", "default_candidates",
-           "make_strategy", "STRATEGY_REGISTRY"]
+           "default_cost_model_for", "make_strategy", "STRATEGY_REGISTRY"]
 
 # stable strategy name -> zero-arg-constructible class (docs/strategies.md)
 STRATEGY_REGISTRY = {
@@ -73,13 +73,20 @@ class CostModel:
 
     Defaults model a TPU chip (HBM ~819 GB/s, VPU ~4 TF/s f32, ~2 us grid
     step); `cpu()` re-weights for the jitted CPU scan engine where the
-    per-step dispatch overhead dominates everything else.
+    per-step dispatch overhead dominates everything else; `sharded()`
+    charges every step its all_gather family so the tuner ranks strategies
+    by synchronization cost.
     """
 
     step_overhead_us: float = 2.0
     us_per_padded_flop: float = 1.0 / 4e6       # 4 TF/s  -> 4e6 flop/us
     us_per_byte: float = 1.0 / 819e3            # 819 GB/s -> 819e3 B/us
     us_per_preamble_nnz: float = 5e-3           # T-factor any-b charge
+    # sharded serving (repro.solver.distributed): each step ends in exactly
+    # one all_gather family, so the collective charge is latency x steps —
+    # the paper's "95% fewer barriers" as a first-class tuning objective.
+    # 0 (the default) models single-device serving
+    collective_latency_us: float = 0.0
 
     @classmethod
     def cpu(cls) -> "CostModel":
@@ -88,17 +95,47 @@ class CostModel:
         return cls(step_overhead_us=12.0, us_per_padded_flop=1.0 / 1e5,
                    us_per_byte=1.0 / 4e6, us_per_preamble_nnz=5e-3)
 
+    @classmethod
+    def sharded(cls, collective_latency_us: float = 5.0,
+                base: "CostModel | None" = None) -> "CostModel":
+        """`base` (default TPU weights) plus a per-step collective charge —
+        the model for ShardedEngine serving, where every schedule step is
+        one cross-device synchronization barrier (~1-10 us on an ICI/NVLink
+        mesh, more over DCN; calibrate for the target fabric)."""
+        return dataclasses.replace(
+            base if base is not None else cls(),
+            collective_latency_us=collective_latency_us)
+
     def predict(self, sched, metrics: TransformMetrics) -> dict:
         """Cost breakdown (us) for one compiled schedule + its transform."""
         steps_us = sched.num_steps * self.step_overhead_us
         flops_us = sched.padded_flops() * self.us_per_padded_flop
         bytes_us = sched.memory_bytes() * self.us_per_byte
         pre_us = metrics.nnz_T * self.us_per_preamble_nnz
+        # collective count == step count (the sharded-body invariant that
+        # count_all_gathers audits), so the charge scales with num_steps
+        coll_us = sched.num_steps * self.collective_latency_us
         return {
             "steps_us": steps_us, "flops_us": flops_us,
             "bytes_us": bytes_us, "preamble_us": pre_us,
-            "total_us": steps_us + flops_us + bytes_us + pre_us,
+            "collectives_us": coll_us,
+            "total_us": steps_us + flops_us + bytes_us + pre_us + coll_us,
         }
+
+
+def default_cost_model_for(engine) -> "CostModel | None":
+    """The auto-tune cost model an engine implies when the caller passes
+    none: `CostModel.sharded()` for sharded engines (the serving
+    configuration and the tuning objective must agree — each step is one
+    collective there), else None (the single-device default).  The ONE
+    definition both facades (`TriangularOperator.from_csr` and
+    `Preconditioner._pair_decision`) consult, so operator-level and
+    pair-level auto-tuning always rank with the same objective for the
+    same mesh."""
+    from ..solver.engines import ShardedEngine
+    if isinstance(engine, ShardedEngine):
+        return CostModel.sharded()
+    return None
 
 
 @dataclasses.dataclass
@@ -367,15 +404,19 @@ class StrategyPortfolio:
         dispatched through the engine registry."""
         import time
         import jax.numpy as jnp
-        from ..solver.engines import resolve_engine
+        from ..solver.engines import compile_source, resolve_engine
         from ..solver.levelset import to_device
-        ds = to_device(cand.sched)
-        fn = resolve_engine(self.engine).compile(ds)
+        eng = resolve_engine(self.engine)
+        # host-lowering engines (sharded) stage their own padded copy;
+        # handing them an unpadded DeviceSchedule would just pin device
+        # memory they never read (engines.compile_source)
+        fn = eng.compile(compile_source(eng, cand.sched,
+                                        lambda: to_device(cand.sched)))
         b = np.random.default_rng(0).standard_normal(cand.ts.A.n_rows)
-        c = jnp.asarray(cand.ts.preamble(b), dtype=ds.dtype)
+        c = jnp.asarray(cand.ts.preamble(b), dtype=cand.sched.dtype)
         jnp.asarray(fn(c)).block_until_ready()         # compile outside timer
         t0 = time.perf_counter()
         for _ in range(self.measure_iters):
-            cc = jnp.asarray(cand.ts.preamble(b), dtype=ds.dtype)
+            cc = jnp.asarray(cand.ts.preamble(b), dtype=cand.sched.dtype)
             jnp.asarray(fn(cc)).block_until_ready()
         return (time.perf_counter() - t0) / self.measure_iters * 1e6

@@ -26,12 +26,20 @@ __all__ = ["device_matvec", "as_matvec", "as_preconditioner",
            "solve_callback"]
 
 
-def device_matvec(A: CSR):
+def device_matvec(A: CSR, mesh=None, axis: str = "model"):
     """y = A @ x as a jit-native JAX closure (scatter-add SpMV).
 
     The CSR arrays ride into the trace as constants cast to x's dtype, so
     the same closure serves float32 and float64 (x64-enabled) programs and
     batched (n, k) operands.
+
+    With `mesh`, the nonzeros are sharded over `axis` and each device
+    scatter-adds its partial products into a full-length accumulator that
+    one psum reduces — ONE collective per matvec, so a Krylov iteration
+    under a mesh synchronizes at the matvec and at the preconditioner's
+    per-step all_gathers only, with no host round-trips in between
+    (docs/distributed.md).  x is replicated, matching the sharded
+    triangular sweeps' replicated carry contract.
     """
     import jax.numpy as jnp
     rows_np = np.repeat(np.arange(A.n_rows), A.row_nnz())
@@ -39,20 +47,60 @@ def device_matvec(A: CSR):
     data_np = np.asarray(A.data)
     n_rows = A.n_rows
 
-    def matvec(x):
-        data = jnp.asarray(data_np, dtype=x.dtype)
-        gathered = x[cols_np]
+    if mesh is None:
+        def matvec(x):
+            data = jnp.asarray(data_np, dtype=x.dtype)
+            gathered = x[cols_np]
+            prod = (data * gathered if x.ndim == 1
+                    else data[:, None] * gathered)
+            out = jnp.zeros((n_rows,) + x.shape[1:], dtype=x.dtype)
+            return out.at[rows_np].add(prod)
+
+        return matvec
+
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from ..solver.distributed import require_axis, shard_map_compat
+    require_axis(mesh, axis)
+    nshards = mesh.shape[axis]
+    # pad the nnz triplet to a multiple of the axis size with inert
+    # entries: row n_rows is a garbage accumulator slot dropped at the end
+    nnz_pad = -(-max(rows_np.size, 1) // nshards) * nshards
+    pad = nnz_pad - rows_np.size
+    rows_sh = np.concatenate([rows_np, np.full(pad, n_rows, rows_np.dtype)])
+    cols_sh = np.concatenate([cols_np, np.zeros(pad, cols_np.dtype)])
+    data_sh = np.concatenate([data_np, np.zeros(pad, data_np.dtype)])
+
+    def body(rows, cols, data, x):
+        gathered = x[cols]
         prod = data * gathered if x.ndim == 1 else data[:, None] * gathered
-        out = jnp.zeros((n_rows,) + x.shape[1:], dtype=x.dtype)
-        return out.at[rows_np].add(prod)
+        out = jnp.zeros((n_rows + 1,) + x.shape[1:], dtype=x.dtype)
+        out = out.at[rows].add(prod)
+        return jax.lax.psum(out, axis)
+
+    shmapped = shard_map_compat(body, mesh,
+                                (P(axis), P(axis), P(axis), P()), P())
+    # the index triplet lives on device once (it is dtype-independent);
+    # the coefficient array is staged once per RHS dtype — repeat eager
+    # matvecs then transfer nothing
+    rows_dev, cols_dev = jnp.asarray(rows_sh), jnp.asarray(cols_sh)
+    data_by_dtype: dict = {}
+
+    def matvec(x):
+        data = data_by_dtype.get(x.dtype)
+        if data is None:
+            with jax.ensure_compile_time_eval():    # never cache tracers
+                data = jnp.asarray(data_sh, dtype=x.dtype)
+            data_by_dtype[x.dtype] = data
+        return shmapped(rows_dev, cols_dev, data, x)[:n_rows]
 
     return matvec
 
 
-def as_matvec(spec):
-    """CSR -> device_matvec(spec); callables pass through."""
+def as_matvec(spec, mesh=None, axis: str = "model"):
+    """CSR -> device_matvec(spec, mesh, axis); callables pass through."""
     if isinstance(spec, CSR):
-        return device_matvec(spec)
+        return device_matvec(spec, mesh=mesh, axis=axis)
     if callable(spec):
         return spec
     raise TypeError(f"matvec must be a CSR matrix or a callable, got "

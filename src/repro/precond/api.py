@@ -105,7 +105,8 @@ class Preconditioner:
     @classmethod
     def from_factors(cls, fac: FactorResult, tune="auto", *, system=None,
                      chunk: int = 256, max_deps: int = 16, dtype=np.float32,
-                     engine=None, cache: bool = True, cache_dir=None,
+                     engine=None, mesh=None, mesh_axis: str = "model",
+                     cache: bool = True, cache_dir=None,
                      cost_model=None,
                      measure_top_k: int = 0) -> "Preconditioner":
         """Build the operator pair for an existing FactorResult.
@@ -117,8 +118,16 @@ class Preconditioner:
         system: the original matrix A (fingerprint key for the pair-
                 decision memo; optional — without it "auto" still tunes,
                 just never memoizes).
+        mesh/mesh_axis: a jax Mesh serves BOTH sweeps through the sharded
+                engine over `mesh_axis`, so M^-1 applications (host or
+                device_apply) run under one mesh with no host round trips
+                between the two sweeps (docs/distributed.md).  Mutually
+                exclusive with engine=.
         Remaining arguments match TriangularOperator.from_csr.
         """
+        if mesh is not None:
+            from ..solver.engines import resolve_engine
+            engine = resolve_engine(engine, mesh=mesh, mesh_axis=mesh_axis)
         report = None
         if tune == "auto":
             tune, report = cls._pair_decision(
@@ -155,17 +164,25 @@ class Preconditioner:
         and including the baseline guarantees the pick is never slower
         than `no_rewriting` up to timer noise.
         """
-        from ..core.portfolio import StrategyPortfolio
+        from ..core.portfolio import (StrategyPortfolio,
+                                      default_cost_model_for)
         from ..solver.engines import resolve_engine
+        eng = resolve_engine(engine)
+        if cost_model is None:
+            # same defaulting as TriangularOperator.from_csr: a pair that
+            # will serve sharded sweeps is tuned against the cost model
+            # that charges the per-step collective
+            cost_model = default_cost_model_for(eng)
         key = None
         if system is not None:
             # like TriangularOperator.from_csr's cache cfg: the decision
             # is engine-independent UNLESS measured re-ranking ran — then
-            # the pick depends on which engine was timed
+            # the pick depends on which engine was timed (cache_token:
+            # sharded engines over different meshes time differently)
             cfg = (fac.kind, chunk, max_deps, np.dtype(dtype).name,
                    measure_top_k,
-                   resolve_engine(engine).name if measure_top_k > 0
-                   else None,
+                   (getattr(eng, "cache_token", lambda: eng.name)()
+                    if measure_top_k > 0 else None),
                    None if cost_model is None
                    else tuple(sorted(_dc.asdict(cost_model).items())))
             key = matrix_fingerprint(system) + "-" + hashlib.sha256(
@@ -208,7 +225,7 @@ class Preconditioner:
         import time as _time
         import jax
         import jax.numpy as jnp
-        from ..solver.engines import resolve_engine
+        from ..solver.engines import compile_source, resolve_engine
         from ..solver.levelset import to_device
         from ..solver.schedule import schedule_for_preamble
         eng = resolve_engine(engine)
@@ -222,15 +239,21 @@ class Preconditioner:
                       if c.error is None}
 
         def side_fn(cand, reversed_):
-            ds = to_device(cand.sched)
             psched, src, row_pos = schedule_for_preamble(
                 cand.ts, chunk=chunk, max_deps=max_deps,
                 dtype=np.dtype(dtype))
-            pre = eng.compile(to_device(psched)) if psched is not None \
-                else None
+            # host-lowering engines take the host schedules directly (the
+            # same engines.compile_source branch the serving path's
+            # _compiled_fn/_preamble_host takes)
+            main_fn = eng.compile(compile_source(
+                eng, cand.sched, lambda: to_device(cand.sched)))
+            pre = None
+            if psched is not None:
+                pre = eng.compile(compile_source(
+                    eng, psched, lambda: to_device(psched)))
             # the SAME composition production runs (device_solve_fn):
             # what gets timed is what gets served
-            return compose_sweep_fn(eng.compile(ds), ds.dtype, pre, src,
+            return compose_sweep_fn(main_fn, cand.sched.dtype, pre, src,
                                     row_pos, reversed_)
 
         n = pair.fwd.matrix["n"]
@@ -279,12 +302,16 @@ class Preconditioner:
 
         Refinement defaults OFF (max_refine=0): M^-1 is approximate by
         construction, and a fixed slightly-perturbed M only changes the
-        Krylov convergence rate, not the attainable outer residual.
+        Krylov convergence rate, not the attainable outer residual.  The
+        sweeps themselves then run fp64-copy-free in the schedule dtype;
+        only the returned z is cast up, preserving the facade's
+        numpy-in / float64-numpy-out contract (module doc).
         """
         z = self.forward.solve(r, engine=engine, max_refine=max_refine,
                                refine_tol=refine_tol)
-        return self.backward.solve(z, engine=engine, max_refine=max_refine,
-                                   refine_tol=refine_tol)
+        z = self.backward.solve(z, engine=engine, max_refine=max_refine,
+                                refine_tol=refine_tol)
+        return np.asarray(z, dtype=np.float64)
 
     def device_apply(self, engine=None):
         """The full M^-1 application as a pure JAX callable: forward and

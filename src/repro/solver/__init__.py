@@ -5,6 +5,7 @@ from .schedule import (LevelSchedule, WidthGroup, build_schedule,
 from .levelset import (DeviceSchedule, to_device, solve_scan, solve_unrolled,
                        solve)
 from .engines import (Engine, ScanEngine, UnrolledEngine, PallasEngine,
+                      ShardedEngine, sharded_engine,
                       register_engine, resolve_engine, get_engine,
                       registered_engines, available_engines, default_engine,
                       engine_capabilities)
@@ -19,6 +20,7 @@ __all__ = [
     "schedule_for_preamble", "schedule_for_transformed", "validate_schedule",
     "DeviceSchedule", "to_device", "solve_scan", "solve_unrolled", "solve",
     "Engine", "ScanEngine", "UnrolledEngine", "PallasEngine",
+    "ShardedEngine", "sharded_engine",
     "register_engine", "resolve_engine", "get_engine", "registered_engines",
     "available_engines", "default_engine", "engine_capabilities",
     "TriangularOperator", "OperatorStats", "matrix_fingerprint",

@@ -87,9 +87,13 @@ class _BoundSolve:
         return self._flipped
 
     def host_solve(self, b: np.ndarray) -> np.ndarray:
-        return self.op.solve(np.asarray(b, dtype=np.float64),
-                             refine_tol=self.refine_tol,
-                             max_refine=self.max_refine)
+        # the operator promotes b itself when refining; with refinement
+        # off it runs fp64-copy-free in the schedule dtype and only the
+        # returned array is cast up — sptrsv's numpy path contract is
+        # float64 out either way
+        x = self.op.solve(np.asarray(b), refine_tol=self.refine_tol,
+                          max_refine=self.max_refine)
+        return np.asarray(x, dtype=np.float64)
 
 
 def _callback_solve(bound: _BoundSolve, b):
@@ -128,7 +132,8 @@ def _solve_jax():
 
 
 def sptrsv(A: CSR, b, *, lower: bool = True, transpose: bool = False,
-           unit_diagonal: bool = False, engine=None, tune="no_rewriting",
+           unit_diagonal: bool = False, engine=None, mesh=None,
+           mesh_axis: str = "model", tune="no_rewriting",
            chunk: int = 256, max_deps: int = 16, dtype=np.float32,
            cache: bool = True, cache_dir=None, refine_tol: float = 1e-10,
            max_refine: int = 6):
@@ -136,12 +141,17 @@ def sptrsv(A: CSR, b, *, lower: bool = True, transpose: bool = False,
     of sweeps).
 
     A:      CSR triangular matrix — lower when `lower=True`, else upper.
-    b:      (n,) or batched (n, k).  A numpy array returns numpy (float64,
-            refined); a JAX array (or tracer) returns a JAX array of the
-            same dtype and is differentiable w.r.t. b.
+    b:      (n,) or batched (n, k).  A numpy array returns float64 numpy
+            (refined by default; with max_refine=0 the device math runs
+            fp64-copy-free in the schedule dtype and only the returned
+            array is cast up); a JAX array (or tracer) returns a JAX
+            array of the same dtype and is differentiable w.r.t. b.
     lower/transpose/unit_diagonal: orientation of the solve, matching
             scipy.sparse.linalg.spsolve_triangular's vocabulary.
     engine: registered engine name, Engine instance, or None (scan).
+    mesh/mesh_axis: a jax Mesh routes the solve through the sharded
+            engine over `mesh_axis` — one all_gather family per schedule
+            step (docs/distributed.md).  Mutually exclusive with engine=.
     tune:   transform selection forwarded to TriangularOperator.from_csr —
             "no_rewriting" (default: plain level scheduling), any stable
             strategy name, a Strategy instance, or "auto" for the
@@ -153,7 +163,8 @@ def sptrsv(A: CSR, b, *, lower: bool = True, transpose: bool = False,
     op = TriangularOperator.from_csr(
         A, tune, side="lower" if lower else "upper",
         transpose=bool(transpose), chunk=chunk, max_deps=max_deps,
-        dtype=dtype, engine=engine, cache=cache, cache_dir=cache_dir)
+        dtype=dtype, engine=engine, mesh=mesh, mesh_axis=mesh_axis,
+        cache=cache, cache_dir=cache_dir)
     bound = _BoundSolve(op, refine_tol=refine_tol, max_refine=max_refine)
     try:
         import jax

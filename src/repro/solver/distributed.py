@@ -6,13 +6,23 @@ The collective count is therefore proportional to the number of steps —
 i.e. to the step count the schedule compiler minimizes (compaction) on top
 of the level count the paper's transformation minimizes.  On a TPU mesh the
 transformation's "95% fewer synchronization barriers" is literally "95%
-fewer all_gathers" here.
+fewer all_gathers" here.  `count_all_gathers` verifies the invariant by
+tracing an unrolled copy of the sharded body with a counting collective:
+exactly one all_gather family (synchronization point) per schedule step,
+carry gathers riding in the same family.
 
 Width groups are sharded independently over their lane dimension and their
 per-step updates are concatenated before the gather, so the number of
 collectives per step stays constant no matter how many width classes the
 schedule uses.  Every group's lane capacity is padded up to a multiple of
-the axis size on the host before sharding.
+the axis size on the host before sharding.  Right-hand sides may be single
+`(n,)` or batched `(n, k)` — lanes are sharded, RHS columns replicated,
+and the gather concatenates along the lane axis only.
+
+This module is the lowering backend of the registered `ShardedEngine`
+(repro.solver.engines): engine compiles are memoized per (schedule
+identity, mesh, axis), so serving paths never re-pad or re-stage groups
+for a schedule they already lowered.  See docs/distributed.md.
 """
 from __future__ import annotations
 
@@ -26,7 +36,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .levelset import DeviceSchedule
 from .schedule import LevelSchedule, WidthGroup
 
-__all__ = ["solve_sharded", "lower_sharded"]
+__all__ = ["solve_sharded", "lower_sharded", "count_all_gathers",
+           "default_mesh", "require_axis", "shard_map_compat"]
 
 # jax >= 0.7 exposes shard_map/pcast at the top level; older releases keep
 # shard_map in jax.experimental and have no pcast (check_rep=False covers
@@ -42,11 +53,42 @@ else:                                                   # pragma: no cover
         return _esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                     check_rep=False)
 
+# public alias: other layers (repro.iterative's sharded SpMV) build their
+# own shard_map programs and must ride the same version-compat shim
+shard_map_compat = _shard_map
+
 _pcast = getattr(jax.lax, "pcast", None)
 
 
 def _mark_varying(x, axis):
     return _pcast(x, (axis,), to="varying") if _pcast is not None else x
+
+
+@functools.lru_cache(maxsize=8)
+def _default_mesh_cached(axis: str) -> Mesh:
+    return Mesh(np.array(jax.devices()), (axis,))
+
+
+def default_mesh(axis: str = "model", devices=None) -> Mesh:
+    """One-axis mesh over `devices` (default: every local device).
+
+    The no-argument form is cached per axis name, so repeat calls return
+    the identical Mesh object and memoized lowerings keyed on it hit.
+    """
+    if devices is None:
+        return _default_mesh_cached(axis)
+    return Mesh(np.asarray(devices), (axis,))
+
+
+def require_axis(mesh: Mesh, axis: str) -> None:
+    """Validate that `axis` names an axis of `mesh` — a mismatch must be
+    an eager ValueError naming the mesh's axes, not a KeyError from deep
+    inside lowering."""
+    if axis not in mesh.shape:
+        raise ValueError(
+            f"mesh has no axis {axis!r}; its axes are "
+            f"{tuple(mesh.axis_names)} — pass mesh_axis=/axis= naming one "
+            f"of them")
 
 
 def _pad_group(g: WidthGroup, mult: int, n: int, n_carry: int) -> WidthGroup:
@@ -78,42 +120,74 @@ def _pad_group(g: WidthGroup, mult: int, n: int, n_carry: int) -> WidthGroup:
         pad2(g.carry_out, n_carry + 1))
 
 
+def _padded_schedule(sched: LevelSchedule, nshards: int) -> LevelSchedule:
+    """The schedule with every group's lane capacity padded to a multiple
+    of `nshards` (host-side numpy, no staging)."""
+    return LevelSchedule(
+        groups=tuple(_pad_group(g, nshards, sched.n, sched.n_carry)
+                     for g in sched.groups),
+        n=sched.n, n_carry=sched.n_carry, num_levels=sched.num_levels,
+        chunk=sched.chunk, max_deps=sched.max_deps,
+        compacted=sched.compacted, build_ms=sched.build_ms)
+
+
+def _stage_padded(sched: LevelSchedule, nshards: int) -> DeviceSchedule:
+    """Pad and stage (the one host-side pass the engine memoizes)."""
+    return DeviceSchedule(_padded_schedule(sched, nshards))
+
+
+def _gather(v, axis):
+    return jax.lax.all_gather(v, axis, tiled=True)
+
+
+def _step_update(x, carry, c_pad, step_groups, *, n_carry, axis,
+                 gather=_gather):
+    """One schedule step on one device's lane shard, published to every
+    device by one all_gather family (the per-step synchronization point).
+    `gather` is injectable so `count_all_gathers` can audit the family
+    count; carry machinery is dropped from the collective entirely when no
+    group ships carry maps (the common, no-split-row case)."""
+    any_carries = any(len(g) == 6 for g in step_groups)
+    xis, tots, rids_l, couts_l = [], [], [], []
+    for g in step_groups:
+        rids, didx, dcoef, dnv = g[:4]
+        gathered = x[didx]                     # (C, D) or (C, D, R)
+        if gathered.ndim == 3:
+            partial = jnp.einsum("cd,cdr->cr", dcoef, gathered)
+        else:
+            partial = jnp.sum(dcoef * gathered, axis=-1)    # (C,)
+        tot = partial + carry[g[4]] if len(g) == 6 else partial
+        xi = (c_pad[rids] - tot) * (dnv if tot.ndim == 1 else dnv[:, None])
+        xis.append(xi)
+        rids_l.append(rids)
+        if any_carries:
+            tots.append(tot)
+            couts_l.append(g[5] if len(g) == 6 else
+                           jnp.full(rids.shape, n_carry + 1, jnp.int32))
+    # publish this step's results to every device: one concatenated
+    # all_gather family per step — the quantity compaction minimizes
+    xi_all = gather(jnp.concatenate(xis), axis)
+    rid_all = gather(jnp.concatenate(rids_l), axis)
+    x = x.at[rid_all].set(xi_all)
+    if any_carries:
+        tot_all = gather(jnp.concatenate(tots), axis)
+        cout_all = gather(jnp.concatenate(couts_l), axis)
+        carry = carry.at[cout_all].set(tot_all)
+    return x, carry
+
+
 def _sharded_body(c_pad, groups, *, n, n_carry, axis):
-    x0 = jnp.zeros((n + 1,), dtype=c_pad.dtype)
-    carry0 = jnp.zeros((n_carry + 2,), dtype=c_pad.dtype)
+    tail = c_pad.shape[1:]                  # () single RHS, (R,) batched
+    x0 = jnp.zeros((n + 1,) + tail, dtype=c_pad.dtype)
+    carry0 = jnp.zeros((n_carry + 2,) + tail, dtype=c_pad.dtype)
     # loop carries become device-varying after the per-step all_gather;
     # mark the (identical) initial values as varying to match
     x0 = _mark_varying(x0, axis)
     carry0 = _mark_varying(carry0, axis)
 
     def body(state, step_groups):
-        x, carry = state
-        # carry machinery is dropped from the collective entirely when no
-        # group ships carry maps (the common, no-split-row case)
-        any_carries = any(len(g) == 6 for g in step_groups)
-        xis, tots, rids_l, couts_l = [], [], [], []
-        for g in step_groups:
-            rids, didx, dcoef, dnv = g[:4]
-            partial = jnp.sum(dcoef * x[didx], axis=-1)     # (C_local,)
-            tot = partial + carry[g[4]] if len(g) == 6 else partial
-            xis.append((c_pad[rids] - tot) * dnv)
-            rids_l.append(rids)
-            if any_carries:
-                tots.append(tot)
-                couts_l.append(g[5] if len(g) == 6 else
-                               jnp.full(rids.shape, n_carry + 1, jnp.int32))
-        # publish this step's results to every device: one concatenated
-        # all_gather family per step — the quantity compaction minimizes
-        xi_all = jax.lax.all_gather(jnp.concatenate(xis), axis, tiled=True)
-        rid_all = jax.lax.all_gather(jnp.concatenate(rids_l), axis,
-                                     tiled=True)
-        x = x.at[rid_all].set(xi_all)
-        if any_carries:
-            tot_all = jax.lax.all_gather(jnp.concatenate(tots), axis,
-                                         tiled=True)
-            cout_all = jax.lax.all_gather(jnp.concatenate(couts_l), axis,
-                                          tiled=True)
-            carry = carry.at[cout_all].set(tot_all)
+        x, carry = _step_update(*state, c_pad, step_groups,
+                                n_carry=n_carry, axis=axis)
         return (x, carry), None
 
     (x, _), _ = jax.lax.scan(body, (x0, carry0), groups)
@@ -122,21 +196,34 @@ def _sharded_body(c_pad, groups, *, n, n_carry, axis):
 
 def solve_sharded(sched: LevelSchedule, c: np.ndarray, mesh: Mesh,
                   axis: str = "model") -> np.ndarray:
-    """Solve with step lanes sharded over `axis` of `mesh`."""
-    fn = lower_sharded(sched, mesh, axis=axis)
+    """Solve with step lanes sharded over `axis` of `mesh`.
+
+    Routed through the `ShardedEngine` machinery, so repeat calls on the
+    same schedule object reuse the memoized lowering instead of re-padding
+    and re-staging the groups per call.  `c` may be `(n,)` or batched
+    `(n, k)`; a leading dimension that does not match the schedule raises
+    ValueError (never an opaque concatenate error).
+    """
+    from .engines import sharded_engine
+    fn = sharded_engine(mesh, axis).compile(sched)
     return np.asarray(fn(jnp.asarray(c, dtype=sched.dtype)))
 
 
 def lower_sharded(sched: LevelSchedule, mesh: Mesh, axis: str = "model"):
-    """Build the jitted sharded solver fn(c) -> x for a fixed schedule."""
+    """Build the jitted sharded solver fn(c) -> x for a fixed schedule.
+
+    The returned fn accepts `(n,)` or batched `(n, k)` right-hand sides
+    (lanes sharded over `axis`, RHS columns replicated) and validates the
+    leading dimension eagerly.  Prefer `ShardedEngine.compile` (or
+    `solve_sharded`), which memoizes this lowering per schedule identity.
+    """
+    require_axis(mesh, axis)
     nshards = mesh.shape[axis]
-    padded = LevelSchedule(
-        groups=tuple(_pad_group(g, nshards, sched.n, sched.n_carry)
-                     for g in sched.groups),
-        n=sched.n, n_carry=sched.n_carry, num_levels=sched.num_levels,
-        chunk=sched.chunk, max_deps=sched.max_deps,
-        compacted=sched.compacted, build_ms=sched.build_ms)
-    ds = DeviceSchedule(padded)
+    # lowering may be triggered lazily from INSIDE a jit trace (an
+    # operator first used as a traced preconditioner); the staged arrays
+    # are memoized on the engine, so they must be concrete, never tracers
+    with jax.ensure_compile_time_eval():
+        ds = _stage_padded(sched, nshards)
     groups = ds.leaves()
     # lanes sharded over their group's lane dimension; x/c replicated
     group_specs = tuple(
@@ -150,8 +237,72 @@ def lower_sharded(sched: LevelSchedule, mesh: Mesh, axis: str = "model"):
     shmapped = _shard_map(body, mesh, (P(), group_specs), P())
 
     @jax.jit
+    def run_padded(c):
+        zero = jnp.zeros((1,) + c.shape[1:], c.dtype)
+        return shmapped(jnp.concatenate([c, zero], axis=0), groups)
+
     def run(c):
-        c_pad = jnp.concatenate([c, jnp.zeros((1,), c.dtype)])
-        return shmapped(c_pad, groups)
+        c = jnp.asarray(c, dtype=ds.dtype)
+        if c.ndim not in (1, 2) or c.shape[0] != ds.n:
+            raise ValueError(
+                f"right-hand side must be ({ds.n},) or ({ds.n}, k) to "
+                f"match the schedule, got shape {c.shape}")
+        return run_padded(c)
 
     return run
+
+
+def count_all_gathers(sched: LevelSchedule, mesh: Mesh | None = None,
+                      axis: str = "model") -> dict:
+    """Audit the collective count of one sharded solve by abstract
+    tracing (no execution, no device staging, any mesh size — default a
+    1-device mesh).
+
+    Traces an unrolled copy of the sharded body over the padded HOST
+    schedule with a counting collective and returns ``{"steps",
+    "families", "calls"}`` where `families` is the number of steps that
+    issued at least one all_gather — the number of per-step
+    synchronization barriers — and `calls` the raw all_gather
+    invocations: 2 per step (values + row ids), uniformly 4 per step on
+    schedules with any split-row group (the carry machinery keys off the
+    static leaf structure, which is shared by every step, not off
+    per-step carry placement).  The module invariant, which
+    benchmarks/tests assert, is ``families == steps``.
+    """
+    from .levelset import CARRY_LEAVES, GROUP_LEAVES
+    if mesh is None:
+        mesh = default_mesh(axis=axis, devices=jax.devices()[:1])
+    require_axis(mesh, axis)
+    padded = _padded_schedule(sched, mesh.shape[axis])
+    # numpy leaves, same per-group layout as DeviceSchedule.leaves():
+    # the audit only traces, so nothing needs to live on the device
+    groups = tuple(
+        tuple(getattr(g, name) for name in GROUP_LEAVES) +
+        (tuple(getattr(g, name) for name in CARRY_LEAVES)
+         if g.carry_in is not None else ())
+        for g in padded.groups)
+    per_step: list[int] = []
+
+    def gather(v, ax):
+        per_step[-1] += 1
+        return jax.lax.all_gather(v, ax, tiled=True)
+
+    def body(c_pad):
+        x = jnp.zeros((padded.n + 1,), dtype=c_pad.dtype)
+        carry = jnp.zeros((padded.n_carry + 2,), dtype=c_pad.dtype)
+        for s in range(padded.num_steps):
+            per_step.append(0)
+            step_groups = tuple(tuple(l[s] for l in g) for g in groups)
+            x, carry = _step_update(x, carry, c_pad, step_groups,
+                                    n_carry=padded.n_carry, axis=axis,
+                                    gather=gather)
+        return x[:padded.n]
+
+    # groups ride in as replicated closure constants: only the collective
+    # structure matters here, and it is independent of the lane sharding
+    shmapped = _shard_map(body, mesh, (P(),), P())
+    jax.eval_shape(shmapped,
+                   jax.ShapeDtypeStruct((padded.n + 1,), padded.dtype))
+    return {"steps": padded.num_steps,
+            "families": sum(1 for k in per_step if k > 0),
+            "calls": sum(per_step)}

@@ -33,15 +33,30 @@ objects).
 """
 from __future__ import annotations
 
+import collections
 import os
 import warnings
 
 __all__ = ["Engine", "ScanEngine", "UnrolledEngine", "PallasEngine",
+           "ShardedEngine", "sharded_engine", "compile_source",
            "register_engine", "resolve_engine", "get_engine",
            "registered_engines", "available_engines", "default_engine",
            "default_interpret", "engine_capabilities", "DEFAULT_ENGINE"]
 
 DEFAULT_ENGINE = "scan"
+
+
+def compile_source(engine, sched, staged_fn):
+    """The schedule form an engine's `compile()` consumes: the host
+    LevelSchedule for host-lowering engines (`lowers_from_host` — they
+    pad/stage their own copy), else `staged_fn()` (a DeviceSchedule
+    supplier, typically a cached staging).  The ONE branch every consumer
+    — serving (`TriangularOperator`) and measuring (portfolio /
+    preconditioner pair timing) — goes through, so what gets timed is
+    always lowered the same way as what gets served."""
+    if getattr(engine, "lowers_from_host", False):
+        return sched
+    return staged_fn()
 
 
 def default_interpret() -> bool:
@@ -56,6 +71,11 @@ class Engine:
     supports_batched_rhs: bool = True
     supports_pallas_backend: bool = False
     dtypes: tuple = ("float32", "float64")
+    # engines whose lowering is a host-side pass (ShardedEngine pads lane
+    # capacities in numpy) set this so consumers hand compile() the host
+    # LevelSchedule instead of staging an unpadded DeviceSchedule the
+    # engine would ignore (a wasted H2D transfer + pinned device copy)
+    lowers_from_host: bool = False
 
     def available(self) -> bool:
         return True
@@ -63,6 +83,35 @@ class Engine:
     def compile(self, dsched):
         """DeviceSchedule -> callable fn(c) -> x over jnp arrays."""
         raise NotImplementedError
+
+    def _require_dtype(self, dsched) -> None:
+        """Enforce the declared dtype capability (module contract: never a
+        silent fallback).  Every concrete compile() calls this first, so a
+        schedule whose dtype the engine is not validated for raises — with
+        the engine name and the offending dtype — instead of silently
+        casting the solve down/up.
+
+        The capability describes what the engine's kernels are validated
+        for; it is not a jax-config check.  Executing a float64 schedule
+        additionally requires jax x64 mode (JAX_ENABLE_X64=1) — without
+        it jax itself truncates device arrays to float32 and says so with
+        its own UserWarning."""
+        import numpy as np
+        got = np.dtype(dsched.dtype).name
+        if got not in self.dtypes:
+            raise ValueError(
+                f"engine {self.name!r} supports dtypes "
+                f"{tuple(self.dtypes)} but the schedule dtype is {got!r}; "
+                f"recompile the schedule with a supported dtype or "
+                f"resolve an engine that declares {got!r}")
+
+    def cache_token(self) -> str:
+        """Identity recorded in measured-mode cache keys ("which engine
+        was timed").  The registry name by default; engines whose timings
+        depend on more than the name must qualify it (ShardedEngine adds
+        the mesh, since the same schedule measures differently per mesh).
+        """
+        return self.name
 
     def capabilities(self) -> dict:
         return {
@@ -85,6 +134,7 @@ class ScanEngine(Engine):
     def compile(self, dsched):
         import jax
         from .levelset import solve_scan
+        self._require_dtype(dsched)
         return jax.jit(lambda c: solve_scan(dsched, c))
 
 
@@ -97,6 +147,7 @@ class UnrolledEngine(Engine):
     def compile(self, dsched):
         import jax
         from .levelset import solve_unrolled
+        self._require_dtype(dsched)
         return jax.jit(lambda c: solve_unrolled(dsched, c))
 
 
@@ -123,6 +174,10 @@ class PallasEngine(Engine):
         import jax.numpy as jnp
         from ..kernels.sptrsv_level import (sptrsv_groups_pallas,
                                             sptrsv_groups_pallas_multi)
+        # the kernel is validated for float32 only: a float64 schedule
+        # must raise here, not silently cast (regression: the capability
+        # metadata used to be declarative-only)
+        self._require_dtype(dsched)
         interpret = (default_interpret() if self.interpret is None
                      else self.interpret)
         groups, n, n_carry = dsched.groups, dsched.n, dsched.n_carry
@@ -140,9 +195,118 @@ class PallasEngine(Engine):
         return fn
 
 
+class ShardedEngine(Engine):
+    """shard_map distributed engine: lanes of each step sharded over one
+    mesh axis, x replicated, ONE all_gather family per schedule step — the
+    transformation's "fewer barriers" is literally fewer collectives
+    (solver/distributed.py, docs/distributed.md).  Batched (n, k) RHS run
+    with lanes sharded and RHS columns replicated, meeting the same
+    `supports_batched_rhs` contract as the single-device engines.
+
+    `mesh=None` (the registered default instance) lazily meshes every
+    local device along `axis` at compile time.  Lowering is memoized per
+    (schedule identity, mesh, axis): repeat compiles of the same schedule
+    return the identical callable and never re-pad or re-stage the groups
+    — the serving path pays the host-side padding exactly once.
+    """
+
+    lowers_from_host = True
+
+    def __init__(self, mesh=None, axis: str = "model",
+                 name: str = "sharded"):
+        if mesh is not None:
+            # fail at construction, not with a KeyError deep in lowering
+            from .distributed import require_axis
+            require_axis(mesh, axis)
+        self.name = name
+        self.mesh = mesh            # None: all local devices, resolved lazily
+        self.axis = axis
+        # (id(schedule), mesh, axis) -> (weakref(schedule), compiled fn);
+        # the weakref guards against id() reuse after garbage collection.
+        # Bounded LRU: each entry pins a padded staged schedule (device
+        # memory), and the registered instance lives for the process —
+        # eviction only costs a re-lowering on a later compile
+        self._lowered: "collections.OrderedDict" = collections.OrderedDict()
+        self._lowered_max: int = 32
+
+    def available(self) -> bool:
+        try:
+            import jax.sharding  # noqa: F401
+        except Exception:  # pragma: no cover - env dependent
+            return False
+        return True
+
+    def resolve_mesh(self):
+        """The engine's mesh: the constructor-pinned one, else the cached
+        all-local-devices mesh along `axis`."""
+        if self.mesh is not None:
+            return self.mesh
+        from .distributed import default_mesh
+        return default_mesh(axis=self.axis)
+
+    def cache_token(self) -> str:
+        """Mesh-qualified identity: two sharded engines over different
+        meshes must never share a measured-mode cache entry — collective
+        costs are a function of the mesh."""
+        mesh = self.resolve_mesh()
+        devs = ",".join(str(d.id) for d in mesh.devices.flat)
+        return f"{self.name}[{self.axis}:{devs}]"
+
+    def compile(self, dsched):
+        import weakref
+        from .distributed import lower_sharded
+        self._require_dtype(dsched)
+        # lowering starts from the HOST schedule (padding is a numpy
+        # pass); a DeviceSchedule hands it back via .host, and a bare
+        # LevelSchedule is accepted directly (solve_sharded's path)
+        host = getattr(dsched, "host", dsched)
+        mesh = self.resolve_mesh()
+        key = (id(host), mesh, self.axis)
+        hit = self._lowered.get(key)
+        if hit is not None and hit[0]() is host:
+            self._lowered.move_to_end(key)
+            return hit[1]
+        fn = lower_sharded(host, mesh, axis=self.axis)
+        for k in [k for k, v in self._lowered.items() if v[0]() is None]:
+            del self._lowered[k]                     # drop collected entries
+        self._lowered[key] = (weakref.ref(host), fn)
+        while len(self._lowered) > self._lowered_max:
+            self._lowered.popitem(last=False)
+        return fn
+
+
 # -- registry -----------------------------------------------------------------
 
 _REGISTRY: dict[str, Engine] = {}
+# bounded LRU: each retained instance pins its memoized lowerings, and a
+# process sweeping many device-subset meshes must not accumulate engines
+# (and their closed-over staged schedules) forever
+_SHARDED_INSTANCES: collections.OrderedDict = collections.OrderedDict()
+_SHARDED_INSTANCES_MAX = 8
+
+
+def sharded_engine(mesh=None, axis: str = "model") -> ShardedEngine:
+    """Memoized ShardedEngine per (mesh, axis): `mesh=None` — or an
+    explicit mesh that equals the default instance's resolved
+    all-local-devices mesh — returns the registered default instance;
+    other meshes share one instance each (bounded LRU).  Every call site
+    (solve_sharded, TriangularOperator(mesh=...), Preconditioner(mesh=...),
+    engine="sharded") therefore lands on ONE instance per distinct mesh,
+    so the lowering memo is never split."""
+    reg = _REGISTRY.get("sharded")
+    default = reg if isinstance(reg, ShardedEngine) else None
+    if default is not None and default.axis == axis and (
+            mesh is None or (default.mesh is None
+                             and mesh == default.resolve_mesh())):
+        return default
+    key = (mesh, axis)
+    eng = _SHARDED_INSTANCES.get(key)
+    if eng is None:
+        eng = _SHARDED_INSTANCES[key] = ShardedEngine(mesh, axis=axis)
+    _SHARDED_INSTANCES.move_to_end(key)
+    while len(_SHARDED_INSTANCES) > _SHARDED_INSTANCES_MAX:
+        _SHARDED_INSTANCES.popitem(last=False)
+    return eng
 
 
 def register_engine(engine: Engine, overwrite: bool = False) -> Engine:
@@ -190,9 +354,19 @@ def default_engine() -> Engine:
     return _REGISTRY[DEFAULT_ENGINE]
 
 
-def resolve_engine(spec=None) -> Engine:
+def resolve_engine(spec=None, *, mesh=None, mesh_axis: str = "model") \
+        -> Engine:
     """Resolve an engine spec: None -> default, a name string -> registry
-    lookup, an Engine (or anything with name + compile) passes through."""
+    lookup, an Engine (or anything with name + compile) passes through.
+
+    `mesh=` (with `mesh_axis=`) resolves to the shared ShardedEngine for
+    that mesh instead — the ONE place the facades' mesh option maps to an
+    engine — and is mutually exclusive with an explicit spec."""
+    if mesh is not None:
+        if spec is not None:
+            raise ValueError("pass either mesh= or engine=, not both "
+                             "(mesh= implies the sharded engine)")
+        return sharded_engine(mesh, mesh_axis)
     if spec is None:
         return default_engine()
     if isinstance(spec, str):
@@ -224,3 +398,4 @@ register_engine(ScanEngine())
 register_engine(UnrolledEngine())
 register_engine(PallasEngine(interpret=None, name="pallas"))
 register_engine(PallasEngine(interpret=True, name="pallas-interpret"))
+register_engine(ShardedEngine())

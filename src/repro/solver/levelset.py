@@ -39,6 +39,11 @@ class DeviceSchedule:
     (4 leaves for carry-free groups, 6 with the carry slot maps)."""
 
     def __init__(self, sched: LevelSchedule):
+        # the host LevelSchedule rides along: engines whose lowering is a
+        # host-side pass (ShardedEngine pads lane capacities in numpy and
+        # memoizes per schedule identity) start from it rather than from
+        # the staged arrays
+        self.host = sched
         self.groups = tuple(
             tuple(jnp.asarray(getattr(g, name)) for name in GROUP_LEAVES) +
             (tuple(jnp.asarray(getattr(g, name)) for name in CARRY_LEAVES)

@@ -225,6 +225,7 @@ class TriangularOperator:
     def from_csr(cls, L: CSR, tune="auto", *, side: str = "lower",
                  transpose: bool = False, chunk: int = 256,
                  max_deps: int = 16, dtype=np.float32, engine=None,
+                 mesh=None, mesh_axis: str = "model",
                  cache: bool = True, cache_dir=None, portfolio=None,
                  cost_model=None,
                  measure_top_k: int = 0) -> "TriangularOperator":
@@ -240,6 +241,17 @@ class TriangularOperator:
                 instance — skip tuning and use that strategy as-is.
         engine: default execution engine — a registered name, an Engine
                 from repro.solver.engines, or None for the scan engine.
+        mesh/mesh_axis: serve sharded sweeps — a jax Mesh routes every
+                solve through the ShardedEngine over `mesh_axis` (one
+                all_gather family per step; docs/distributed.md).
+                Mutually exclusive with `engine=`.  With tune="auto" and
+                no explicit cost_model, tuning defaults to
+                CostModel.sharded() so the tuner prices the per-step
+                collective it will actually pay.  The compiled artifact
+                is otherwise mesh-independent: fixed-strategy sharded and
+                single-device operators for the same matrix share the
+                cache (auto-tuned ones differ through the cost model in
+                the key).
         cache:  look up / persist the compiled artifact (memory + disk,
                 keyed by matrix fingerprint and configuration, orientation
                 bits included).
@@ -260,17 +272,24 @@ class TriangularOperator:
 
         if side not in ("lower", "upper"):
             raise ValueError(f"side must be 'lower' or 'upper', got {side!r}")
-        eng = resolve_engine(engine)
+        eng = resolve_engine(engine, mesh=mesh, mesh_axis=mesh_axis)
+        if tune == "auto" and cost_model is None:
+            # sharded engines imply the cost model that charges their
+            # per-step collective (docs/distributed.md)
+            from ..core.portfolio import default_cost_model_for
+            cost_model = default_cost_model_for(eng)
         cache = cache and portfolio is None
         tune_key = "auto" if tune == "auto" else \
             strategy_label(make_strategy(tune))
         # the compiled artifact is engine-independent (engine is a
         # solve-time choice), EXCEPT when measured re-ranking ran: then the
-        # tuner's pick depends on which engine was timed
+        # tuner's pick depends on which engine was timed (cache_token, not
+        # name: sharded engines over different meshes time differently)
         cfg = {"tune": tune_key, "side": side, "transpose": bool(transpose),
                "chunk": chunk, "max_deps": max_deps,
                "dtype": np.dtype(dtype).name,
-               "engine": eng.name if measure_top_k > 0 else None,
+               "engine": (getattr(eng, "cache_token", lambda: eng.name)()
+                          if measure_top_k > 0 else None),
                "measure_top_k": measure_top_k,
                "cost_model": (None if cost_model is None
                               else sorted(_dc.asdict(cost_model).items()))}
@@ -407,33 +426,60 @@ class TriangularOperator:
         return ds
 
     def _compiled_fn(self, engine):
-        """engine -> compiled schedule fn, cached on the shared payload."""
+        """engine -> compiled schedule fn, cached on the shared payload.
+
+        Host-lowering engines (ShardedEngine: numpy padding + its own
+        staging, memoized per schedule identity) get the host schedule
+        directly — staging the unpadded arrays would pin a device copy
+        the engine never reads (engines.compile_source)."""
+        from .engines import compile_source
         cached = self._runtime["compiled"].get(engine.name)
         if cached is not None and cached[0] is engine:
             return cached[1]
-        fn = engine.compile(self._staged())
+        fn = engine.compile(
+            compile_source(engine, self._sched, self._staged))
         self._runtime["compiled"][engine.name] = (engine, fn)
         return fn
+
+    def _canon_dtype(self):
+        """The schedule dtype as jax will actually realize it, resolved
+        once per payload: under default (non-x64) config a float64
+        schedule executes in float32, and requesting float64 per solve
+        would emit jax's truncation UserWarning on every call."""
+        dt = self._runtime.get("canon_dtype")
+        if dt is None:
+            import jax.numpy as jnp
+            dt = self._runtime["canon_dtype"] = \
+                jnp.empty(0, dtype=self._sched.dtype).dtype
+        return dt
 
     def _device_solve(self, c: np.ndarray, engine) -> np.ndarray:
         """One schedule execution in the schedule dtype."""
         import jax.numpy as jnp
-        ds = self._staged()      # staged once, shared via the payload cache
         return np.asarray(self._compiled_fn(engine)(
-            jnp.asarray(c, dtype=ds.dtype)))
+            jnp.asarray(c, dtype=self._canon_dtype())))
+
+    def _preamble_host(self):
+        """(LevelSchedule|None, src, row_pos) for the T-factor preamble,
+        compiled once on the shared payload (None = identity preamble)."""
+        entry = self._runtime.get("preamble_host")
+        if entry is None:
+            from .schedule import schedule_for_preamble
+            entry = self._runtime["preamble_host"] = schedule_for_preamble(
+                self._ts, chunk=self._config.get("chunk", 256),
+                max_deps=self._config.get("max_deps", 16),
+                dtype=np.dtype(self._config.get("dtype", "float32")))
+        return entry
 
     def _preamble_staged(self):
-        """(DeviceSchedule|None, src, row_pos) for the T-factor preamble,
-        staged once on the shared payload (None = identity preamble)."""
+        """_preamble_host with the schedule staged to device, once on the
+        shared payload (for engines that compile DeviceSchedules; host-
+        lowering engines take _preamble_host directly)."""
         entry = self._runtime.get("preamble")
         if entry is None:
             import jax
             from .levelset import to_device
-            from .schedule import schedule_for_preamble
-            psched, src, row_pos = schedule_for_preamble(
-                self._ts, chunk=self._config.get("chunk", 256),
-                max_deps=self._config.get("max_deps", 16),
-                dtype=np.dtype(self._config.get("dtype", "float32")))
+            psched, src, row_pos = self._preamble_host()
             with jax.ensure_compile_time_eval():    # see _staged
                 entry = ((to_device(psched) if psched is not None else None),
                          src, row_pos)
@@ -460,28 +506,36 @@ class TriangularOperator:
             raise ValueError(
                 "operator has no resolvable default engine "
                 f"({self._engine_name!r}); pass engine= explicitly")
-        ds = self._staged()
+        from .engines import compile_source
         main_fn = self._compiled_fn(eng)
-        pre_ds, src, row_pos = self._preamble_staged()
+        psched, src, row_pos = self._preamble_host()
         pre_fn = None
-        if pre_ds is not None:
+        if psched is not None:
             pre_compiled = self._runtime.setdefault("pre_compiled", {})
             cached = pre_compiled.get(eng.name)
             if cached is not None and cached[0] is eng:
                 pre_fn = cached[1]
             else:
-                pre_fn = eng.compile(pre_ds)
+                # same host-vs-staged branch as _compiled_fn
+                pre_fn = eng.compile(compile_source(
+                    eng, psched, lambda: self._preamble_staged()[0]))
                 pre_compiled[eng.name] = (eng, pre_fn)
-        return compose_sweep_fn(main_fn, ds.dtype, pre_fn, src, row_pos,
-                                self._reversed)
+        return compose_sweep_fn(main_fn, self._canon_dtype(), pre_fn, src,
+                                row_pos, self._reversed)
 
-    def _oriented_solve(self, v: np.ndarray, engine) -> np.ndarray:
+    def _oriented_solve(self, v: np.ndarray, engine,
+                        out_dtype=None) -> np.ndarray:
         """Device solve of the oriented system for an original-orientation
-        right-hand side v: reverse, preamble, schedule, un-reverse."""
+        right-hand side v: reverse, preamble, schedule, un-reverse.
+
+        out_dtype=None returns the schedule dtype's natural output (the
+        no-refinement serving path); the refinement loop passes float64 so
+        corrections accumulate at full precision."""
         if self._reversed:
             v = v[::-1]
-        x = self._device_solve(self._ts.preamble(v), engine) \
-            .astype(np.float64)
+        x = self._device_solve(self._ts.preamble(v), engine)
+        if out_dtype is not None:
+            x = x.astype(out_dtype)
         return x[::-1] if self._reversed else x
 
     def solve(self, b: np.ndarray, *, engine=None,
@@ -494,9 +548,13 @@ class TriangularOperator:
         the relative residual max|b - Ax| / max(1, max|b|) <= refine_tol
         (or max_refine correction rounds); the residual matvec is
         transpose-aware, so L^T/U^T solves refine against the transposed
-        operator.  Set max_refine=0 for the raw device output with no
-        residual computed (stats.last_residual stays NaN) — the cheapest
-        per-solve path.  Returns float64, same leading shape as b.
+        operator.  Refined solves return float64, same leading shape as b.
+
+        Set max_refine=0 for the cheapest per-solve path: no residual is
+        computed (stats.last_residual stays NaN), b is NOT promoted to a
+        float64 host copy, and the result comes back in the schedule
+        dtype's natural output (float32 by default) — the raw device
+        pipeline, exactly what refinement-free serving wants.
         """
         from .engines import resolve_engine
         eng = self._engine if engine is None else resolve_engine(engine)
@@ -504,22 +562,27 @@ class TriangularOperator:
             raise ValueError(
                 "operator has no resolvable default engine "
                 f"({self._engine_name!r}); pass engine= explicitly")
-        b = np.asarray(b, dtype=np.float64)
+        # refinement-off solves skip the float64 promotion entirely: no
+        # fp64 copy of b, no fp64 cast of the device result
+        b = np.asarray(b, dtype=np.float64) if max_refine > 0 \
+            else np.asarray(b)
         if b.ndim not in (1, 2) or b.shape[0] != self.n:
             raise ValueError(f"b must be ({self.n},) or ({self.n}, k), "
                              f"got {b.shape}")
         t0 = time.perf_counter()
-        x = self._oriented_solve(b, eng)
-        bscale = max(1.0, float(np.abs(b).max(initial=0.0)))
+        x = self._oriented_solve(
+            b, eng, out_dtype=np.float64 if max_refine > 0 else None)
         resid = float("nan")
         rounds = 0
-        while max_refine > 0:       # refinement off => skip the host matvec
-            r = b - self._L.matvec(x, transpose=self.transpose)
-            resid = float(np.abs(r).max(initial=0.0)) / bscale
-            if resid <= refine_tol or rounds >= max_refine:
-                break
-            x = x + self._oriented_solve(r, eng)
-            rounds += 1
+        if max_refine > 0:          # refinement off => skip the host matvec
+            bscale = max(1.0, float(np.abs(b).max(initial=0.0)))
+            while True:
+                r = b - self._L.matvec(x, transpose=self.transpose)
+                resid = float(np.abs(r).max(initial=0.0)) / bscale
+                if resid <= refine_tol or rounds >= max_refine:
+                    break
+                x = x + self._oriented_solve(r, eng, out_dtype=np.float64)
+                rounds += 1
         ms = (time.perf_counter() - t0) * 1e3
         st = self.stats
         st.solves += 1

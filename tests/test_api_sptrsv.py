@@ -136,6 +136,20 @@ def test_upper_solve_refines_to_float64():
     assert _rel_err(x, x_ref) < 1e-8
 
 
+def test_numpy_path_returns_float64_even_without_refinement():
+    """sptrsv's public numpy contract is float64 out regardless of
+    max_refine: the refinement-free operator path now runs fp64-copy-free
+    in the schedule dtype internally (ISSUE 5 satellite), but the surface
+    casts the returned array up."""
+    L = generators.random_lower(90, avg_offdiag=2.0, seed=3, max_back=10)
+    b = np.random.default_rng(4).standard_normal(90).astype(np.float32)
+    x0 = sptrsv(L, b, max_refine=0, cache=False)
+    assert isinstance(x0, np.ndarray) and x0.dtype == np.float64
+    x = sptrsv(L, b, cache=False)
+    assert x.dtype == np.float64
+    assert _rel_err(x0, x) < 1e-3       # same solve, device precision
+
+
 def test_grad_matches_finite_differences():
     """Acceptance: jax.grad of sum(sptrsv(L, b)) w.r.t. b matches finite
     differences to <= 1e-4."""

@@ -109,6 +109,52 @@ def test_committed_iterative_artifact_guarantee():
 
 
 @pytest.mark.bench
+def test_run_smoke_has_distributed_section(tmp_path):
+    """--smoke carries a distributed_smoke section: sharded solves checked
+    on the available devices, with the barrier invariant intact."""
+    from benchmarks import distributed_bench as db
+
+    rec = db.smoke_record()
+    assert rec["matrices"]
+    for m in rec["matrices"].values():
+        assert m["all_gathers"]["no_rewriting"] == m["steps"]["no_rewriting"]
+        assert m["all_gathers"]["transformed"] == m["steps"]["transformed"]
+        assert m["steps"]["transformed"] <= m["steps"]["no_rewriting"]
+        for p in m["curve"]:
+            assert p["err_no_rewriting"] < 1e-3
+            assert p["err_transformed"] < 1e-3
+        # no wall-clock assertions at smoke scale (see operator smoke
+        # note above); timing guarantees live on the committed artifact
+
+
+@pytest.mark.bench
+def test_committed_distributed_artifact_guarantee():
+    """The committed experiments/BENCH_distributed.json upholds the ISSUE 5
+    acceptance criteria: the all_gather count equals the step count for
+    every schedule, and the transformed schedule's sharded solve is not
+    slower than the untransformed one on at least one analogue."""
+    from pathlib import Path
+
+    src = Path("experiments/BENCH_distributed.json")
+    assert src.exists(), "run benchmarks.distributed_bench to regenerate"
+    data = json.loads(src.read_text())
+    assert set(data["matrices"]) == {
+        f"lung2_like@{data['config']['scales'][0]}",
+        f"torso2_like@{data['config']['scales'][1]}"}
+    for m in data["matrices"].values():
+        for variant in ("no_rewriting", "transformed"):
+            assert m["all_gathers"][variant] == m["steps"][variant]
+        assert m["steps"]["transformed"] <= m["steps"]["no_rewriting"]
+        assert {p["devices"] for p in m["curve"]} == {1, 2, 4, 8}
+        for p in m["curve"]:
+            assert p["err_no_rewriting"] < 1e-3
+            assert p["err_transformed"] < 1e-3
+    assert data["transformed_not_slower_any"]
+    assert any(m["transformed_not_slower"]
+               for m in data["matrices"].values())
+
+
+@pytest.mark.bench
 def test_bench_schedule_fields(tmp_path):
     """BENCH_schedule.json carries the perf-trajectory fields."""
     from benchmarks.run import bench_schedule

@@ -23,7 +23,8 @@ def _small_problem(n=120, seed=7):
 
 def test_registry_contents_and_capabilities():
     names = registered_engines()
-    assert {"scan", "unrolled", "pallas", "pallas-interpret"} <= set(names)
+    assert {"scan", "unrolled", "pallas", "pallas-interpret",
+            "sharded"} <= set(names)
     assert set(available_engines()) <= set(names)
     caps = engine_capabilities()
     for name in names:
@@ -196,3 +197,49 @@ def test_pallas_engine_interpret_pinning():
     assert eng.interpret is True
     assert get_engine("pallas").interpret is None       # env-default instance
     assert get_engine("pallas-interpret").interpret is True
+
+
+# -- dtype capability enforcement (ISSUE 5 satellite) -------------------------
+
+def _schedule_with_dtype(dtype, n=100, seed=3):
+    L = generators.random_lower(n, avg_offdiag=2.0, seed=seed, max_back=12)
+    return L, schedule_for_csr(L, build_levels(L), chunk=32, max_deps=4,
+                               dtype=dtype)
+
+
+def test_pallas_rejects_float64_schedule():
+    """Regression: PallasEngine declares dtypes=("float32",) but compile()
+    used to silently accept (and cast) a float64 schedule — the module's
+    own "never a silent fallback" contract.  The error must name the
+    engine and the offending dtype."""
+    _, s64 = _schedule_with_dtype(np.float64)
+    ds = to_device(s64)
+    for name in ("pallas", "pallas-interpret"):
+        with pytest.raises(ValueError, match=rf"{name}.*float64"):
+            get_engine(name).compile(ds)
+
+
+def test_dtype_capable_engines_still_compile_float64():
+    L, s64 = _schedule_with_dtype(np.float64)
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    x_ref = solve_csr_seq(L, b)
+    for name in ("scan", "unrolled"):
+        eng = get_engine(name)
+        assert "float64" in eng.dtypes
+        x = np.asarray(eng.compile(to_device(s64))(b))
+        assert np.abs(x - x_ref).max() < 1e-4, name
+
+
+def test_operator_surfaces_pallas_dtype_violation():
+    """The capability check fires through the serving facade too: a
+    float64 operator compiled against the pallas engine raises instead of
+    silently casting the solve to float32."""
+    from repro.solver import TriangularOperator
+    L = generators.random_lower(80, avg_offdiag=2.0, seed=9, max_back=10)
+    op = TriangularOperator.from_csr(L, tune="no_rewriting", chunk=16,
+                                     max_deps=4, dtype=np.float64,
+                                     cache=False)
+    b = np.random.default_rng(1).standard_normal(80)
+    assert np.isfinite(op.solve(b)).all()       # scan path: float64 is fine
+    with pytest.raises(ValueError, match="float64"):
+        op.solve(b, engine="pallas-interpret")

@@ -260,3 +260,26 @@ def test_no_refine_is_device_precision(lung_small):
     raw = _rel_err(op.solve(b, max_refine=0), x_ref)
     refined = _rel_err(op.solve(b), x_ref)
     assert refined < 1e-8 < raw < 1e-3
+
+
+def test_no_refine_skips_float64_promotion(lung_small):
+    """Regression (ISSUE 5 satellite): max_refine=0 is sold as the
+    cheapest per-solve path, yet solve() used to copy b to host float64
+    and cast the device result up unconditionally.  With refinement off
+    the result must come back in the schedule dtype (float32 here), for
+    single and batched RHS; refined solves still return float64."""
+    L = lung_small
+    op = TriangularOperator.from_csr(L, tune="no_rewriting", chunk=128,
+                                     max_deps=8, cache=False)
+    b32 = np.random.default_rng(9).standard_normal(L.n_rows) \
+        .astype(np.float32)
+    x = op.solve(b32, max_refine=0)
+    assert x.dtype == np.float32            # no fp64 copy anywhere
+    assert np.isnan(op.stats.last_residual)     # no host residual matvec
+    X = op.solve(np.tile(b32[:, None], (1, 3)), max_refine=0)
+    assert X.dtype == np.float32 and X.shape == (L.n_rows, 3)
+    # a float64 b stays float64-free on the output too: the device
+    # pipeline's natural dtype is the schedule dtype
+    assert op.solve(b32.astype(np.float64), max_refine=0).dtype \
+        == np.float32
+    assert op.solve(b32).dtype == np.float64    # refinement: fp64 contract

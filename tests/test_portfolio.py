@@ -94,14 +94,36 @@ def test_cost_model_breakdown_fields(lung_small):
             continue
         bd = c.breakdown
         assert set(bd) == {"steps_us", "flops_us", "bytes_us",
-                           "preamble_us", "total_us"}
+                           "preamble_us", "collectives_us", "total_us"}
         assert bd["total_us"] == pytest.approx(
             bd["steps_us"] + bd["flops_us"] + bd["bytes_us"]
-            + bd["preamble_us"])
+            + bd["preamble_us"] + bd["collectives_us"])
+        assert bd["collectives_us"] == 0.0      # default: single-device
         assert c.predicted_us == bd["total_us"]
     # nnz_T charge: no_rewriting pays zero preamble
     nr = next(c for c in rep.candidates if c.label == "no_rewriting")
     assert nr.breakdown["preamble_us"] == 0.0 and nr.nnz_T == 0
+
+
+def test_cost_model_collective_term_ranks_by_steps(lung_small):
+    """The sharded preset charges every step its all_gather family
+    (latency x step count) — synchronization cost as a first-class tuning
+    objective.  A latency high enough to dominate must rank candidates by
+    step count, and the charge itself must equal latency x steps."""
+    cm = TuningCostModel.sharded(collective_latency_us=1e4)
+    assert cm.collective_latency_us == 1e4
+    rep = StrategyPortfolio(chunk=128, max_deps=8, cost_model=cm) \
+        .tune(lung_small)
+    ok = [c for c in rep.candidates if c.error is None]
+    for c in ok:
+        assert c.breakdown["collectives_us"] == \
+            pytest.approx(c.steps * 1e4)
+    steps = [c.steps for c in ok]
+    assert steps == sorted(steps)       # latency-dominated => rank by steps
+    # the transformation wins under a barrier-dominated model: its whole
+    # point is fewer synchronization steps
+    assert rep.best.steps <= min(
+        c.steps for c in ok if c.label == "no_rewriting")
 
 
 def test_report_serializes(lung_small):

@@ -284,6 +284,18 @@ def test_facade_device_apply_matches_host(spd):
     np.testing.assert_allclose(z_dev, z_host, rtol=1e-4, atol=1e-4)
 
 
+def test_facade_host_apply_returns_float64(spd):
+    """The facade's host-path contract (module doc): numpy in, float64
+    numpy out — even though the underlying refinement-free operator
+    solves now run (and return) in the schedule dtype."""
+    P = Preconditioner.ic0(spd, tune="no_rewriting", cache=False)
+    z = P.apply(np.random.default_rng(7).standard_normal(spd.n_rows))
+    assert z.dtype == np.float64
+    z2 = P(np.random.default_rng(8).standard_normal(spd.n_rows)
+           .astype(np.float32))
+    assert z2.dtype == np.float64
+
+
 def test_facade_jit_apply(spd):
     import jax
     import jax.numpy as jnp
