@@ -14,6 +14,11 @@ from .codegen import generate_c_source, generated_code_bytes
 from .portfolio import (PairReport, PortfolioCandidate, PortfolioReport,
                         StrategyPortfolio, default_candidates, make_strategy)
 from .portfolio import CostModel as TuningCostModel
+from .resilience import (CacheQuarantineWarning, EngineFallbackError,
+                         EngineFallbackWarning, HealthPolicy,
+                         HealthRepairWarning, NumericalHealthError,
+                         ResilienceError, ResilienceWarning, RetryPolicy,
+                         SolveGuard, resolve_health_policy)
 
 __all__ = [
     "CostModel", "GraphView", "EquationStore", "RewriteResult",
@@ -23,4 +28,8 @@ __all__ = [
     "generate_c_source", "generated_code_bytes",
     "StrategyPortfolio", "PortfolioCandidate", "PortfolioReport",
     "PairReport", "TuningCostModel", "default_candidates", "make_strategy",
+    "ResilienceError", "NumericalHealthError", "EngineFallbackError",
+    "ResilienceWarning", "EngineFallbackWarning", "HealthRepairWarning",
+    "CacheQuarantineWarning", "HealthPolicy", "SolveGuard", "RetryPolicy",
+    "resolve_health_policy",
 ]

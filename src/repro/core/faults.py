@@ -1,0 +1,190 @@
+"""Fault-injection harness: chaos-test the solve path's resilience layer.
+
+Each injector is a context manager that makes one failure class real —
+NaN-poisoned schedule payloads, corrupt cache pickles, engines whose
+compile fails, a mesh whose devices are gone — so `tests/test_resilience.py`
+can prove every fault either recovers (via `repro.core.resilience`'s
+guards and fallback chains) or raises a typed, actionable error:
+
+    from repro.core import faults
+
+    with faults.nan_schedule_payload():
+        op = TriangularOperator.from_csr(L, cache=False)     # poisoned
+        op.solve(b, health="fallback")         # recovers via host oracle
+
+    with faults.fail_engine_compile("pallas-interpret"):
+        op.solve(b, engine="pallas-interpret")  # downgrades to scan
+
+Injectors patch the repo's own seams (schedule construction, the engine
+registry, sharded lowering) — they never monkeypatch jax or numpy, so a
+fault is scoped, deterministic, and cannot leak outside the context.
+They are test/tooling utilities: nothing in the serving path imports this
+module.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import pickle
+from pathlib import Path
+
+import numpy as np
+
+__all__ = [
+    "poison_schedule", "scale_schedule", "nan_schedule_payload",
+    "wrong_schedule_values", "corrupt_cache_entries", "fail_engine_compile",
+    "engine_unavailable", "lose_mesh",
+]
+
+
+@contextlib.contextmanager
+def _patched(obj, name: str, value):
+    """Set an attribute for the context's duration; restores exactly the
+    prior state (including 'attribute absent from the instance dict')."""
+    missing = object()
+    prior = obj.__dict__.get(name, missing) if hasattr(obj, "__dict__") \
+        else getattr(obj, name, missing)
+    setattr(obj, name, value)
+    try:
+        yield
+    finally:
+        if prior is missing:
+            try:
+                delattr(obj, name)
+            except AttributeError:  # pragma: no cover - class attr shadowed
+                pass
+        else:
+            setattr(obj, name, prior)
+
+
+# -- schedule-payload faults --------------------------------------------------
+
+
+def poison_schedule(sched, value: float = np.nan):
+    """A copy of a LevelSchedule whose per-row 1/diag payload is `value`
+    everywhere — every device solve through it emits `value`-poisoned
+    output while shapes, steps, and engine lowering stay valid."""
+    groups = tuple(
+        dataclasses.replace(g, dinv=np.full_like(g.dinv, value))
+        for g in sched.groups)
+    return dataclasses.replace(sched, groups=groups)
+
+
+def scale_schedule(sched, factor: float):
+    """A copy with every 1/diag payload scaled by `factor`: a finite but
+    WRONG schedule — the silent-wrong-answer fault class that only a
+    residual check can catch."""
+    groups = tuple(
+        dataclasses.replace(g, dinv=g.dinv * factor) for g in sched.groups)
+    return dataclasses.replace(sched, groups=groups)
+
+
+@contextlib.contextmanager
+def _schedule_fault(mutate):
+    from ..solver import schedule as _sched
+    real = _sched.schedule_for_transformed
+
+    def faulty(*args, **kwargs):
+        return mutate(real(*args, **kwargs))
+
+    with _patched(_sched, "schedule_for_transformed", faulty):
+        yield
+
+
+def nan_schedule_payload(value: float = np.nan):
+    """Every schedule compiled inside the context carries a non-finite
+    payload (poison_schedule), so device solves produce NaN/Inf output."""
+    return _schedule_fault(lambda s: poison_schedule(s, value))
+
+
+def wrong_schedule_values(factor: float = 2.0):
+    """Every schedule compiled inside the context is finitely WRONG
+    (scale_schedule) — the solve succeeds, finiteness checks pass, and
+    only a residual check against the original matrix can detect it."""
+    return _schedule_fault(lambda s: scale_schedule(s, factor))
+
+
+# -- cache faults -------------------------------------------------------------
+
+
+def corrupt_cache_entries(cache_dir, mode: str = "garbage") -> list:
+    """Corrupt every operator artifact under `cache_dir` in place.
+
+    mode: "garbage"  — non-pickle bytes (torn write from a crashed
+                       process without atomic replace),
+          "truncate" — valid pickle prefix cut short (partial write),
+          "stale"    — a well-formed pickle whose version field predates
+                       CACHE_VERSION.
+    Returns the corrupted paths.
+    """
+    paths = sorted(Path(cache_dir).glob("op-*.pkl"))
+    for p in paths:
+        if mode == "garbage":
+            p.write_bytes(b"\x80\x05this is not a valid pickle stream")
+        elif mode == "truncate":
+            raw = p.read_bytes()
+            p.write_bytes(raw[: max(1, len(raw) // 3)])
+        elif mode == "stale":
+            payload = pickle.loads(p.read_bytes())
+            payload["version"] = -1
+            p.write_bytes(pickle.dumps(payload))
+        else:
+            raise ValueError(f"unknown corruption mode {mode!r}")
+    return paths
+
+
+# -- engine faults ------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def fail_engine_compile(name: str, times: int | None = None, exc=None):
+    """The named REGISTERED engine's compile() raises for the first
+    `times` calls inside the context (None = every call).  Yields a
+    counter dict: {"calls": total compile calls, "failed": injected
+    failures} for asserting the fault actually fired."""
+    from ..solver.engines import get_engine
+    eng = get_engine(name)
+    real = eng.compile                  # bound method of the live instance
+    count = {"calls": 0, "failed": 0}
+
+    def faulty(dsched):
+        count["calls"] += 1
+        if times is None or count["calls"] <= times:
+            count["failed"] += 1
+            raise (exc if exc is not None else RuntimeError(
+                f"injected compile failure in engine {name!r} "
+                f"(call {count['calls']})"))
+        return real(dsched)
+
+    with _patched(eng, "compile", faulty):
+        yield count
+
+
+@contextlib.contextmanager
+def engine_unavailable(name: str):
+    """The named registered engine reports available() == False inside the
+    context (e.g. "Pallas missing from this process")."""
+    from ..solver.engines import get_engine
+    eng = get_engine(name)
+    with _patched(eng, "available", lambda: False):
+        yield
+
+
+# -- mesh faults --------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def lose_mesh(exc=None):
+    """Sharded lowering fails as if the mesh's devices were lost: every
+    `lower_sharded` call inside the context raises.  Schedules the sharded
+    engine lowered BEFORE the fault keep their memoized callables — a real
+    device loss also only breaks new work, which is exactly what the
+    fallback chain must cover."""
+    from ..solver import distributed as _dist
+
+    def faulty(*args, **kwargs):
+        raise (exc if exc is not None else RuntimeError(
+            "injected mesh device loss: sharded lowering unavailable"))
+
+    with _patched(_dist, "lower_sharded", faulty):
+        yield

@@ -156,6 +156,7 @@ class PortfolioCandidate:
     metrics: TransformMetrics | None = None
     measured_us: float | None = None
     error: str | None = None
+    measure_note: str | None = None     # timeout / outlier / failure detail
     strategy: Strategy | None = None
     ts: TransformedSystem | None = None
     sched: object | None = None
@@ -199,6 +200,7 @@ class PortfolioReport:
                 "memory_bytes": c.memory_bytes, "nnz_T": c.nnz_T,
                 "breakdown": {k: round(v, 2) for k, v in c.breakdown.items()},
                 "error": c.error,
+                "measure_note": c.measure_note,
             } for i, c in enumerate(self.candidates)],
         }
 
@@ -299,6 +301,17 @@ class StrategyPortfolio:
                     the real engine (preamble included) and re-rank those
                     by measured wall time.
     measure_iters:  timing repetitions per measured candidate.
+    measure_timeout_s: wall-clock budget per measured candidate — sampling
+                    stops at the deadline and whatever was collected
+                    decides (a pathologically slow candidate must not hang
+                    the whole tuning run).
+    measure_outlier_ratio: when the samples of one candidate disagree by
+                    more than this factor (a scheduler hiccup or GC pause
+                    polluting a rep), the candidate is re-measured once
+                    and the extra samples are pooled in; the recorded time
+                    is the pooled minimum (the microbenchmark noise
+                    floor).  What happened is recorded on the candidate's
+                    `measure_note`.
     engine:         engine used by the measured mode — a registered name,
                     an Engine from repro.solver.engines, or None for the
                     default scan engine (resolved through the registry).
@@ -307,6 +320,8 @@ class StrategyPortfolio:
     def __init__(self, candidates=None, cost_model: CostModel | None = None,
                  chunk: int = 256, max_deps: int = 16, dtype=np.float32,
                  measure_top_k: int = 0, measure_iters: int = 3,
+                 measure_timeout_s: float = 10.0,
+                 measure_outlier_ratio: float = 4.0,
                  engine=None):
         self.candidates = (default_candidates() if candidates is None
                            else list(candidates))
@@ -314,6 +329,8 @@ class StrategyPortfolio:
         self.chunk, self.max_deps, self.dtype = chunk, max_deps, dtype
         self.measure_top_k = measure_top_k
         self.measure_iters = measure_iters
+        self.measure_timeout_s = measure_timeout_s
+        self.measure_outlier_ratio = measure_outlier_ratio
         self.engine = engine
 
     def tune(self, L: CSR) -> PortfolioReport:
@@ -355,7 +372,16 @@ class StrategyPortfolio:
             # predictions — the top-k stay ahead of the rest by model rank
             top = scored[:self.measure_top_k]
             for c in top:
-                c.measured_us = self._measure(c)
+                try:
+                    self._measure(c)
+                except Exception as e:
+                    # a candidate whose MEASUREMENT fails (engine compile
+                    # blew up, device lost mid-benchmark) is still a valid
+                    # compiled artifact — park it at the bottom of the
+                    # measured group instead of killing the tuning run
+                    c.measured_us = float("inf")
+                    c.measure_note = (f"measure failed: "
+                                      f"{type(e).__name__}: {e}")
             top.sort(key=lambda c: c.measured_us)
             scored = top + scored[self.measure_top_k:]
         lv_before = scored[0].metrics.num_levels_before
@@ -401,7 +427,16 @@ class StrategyPortfolio:
 
     def _measure(self, cand: PortfolioCandidate) -> float:
         """End-to-end per-solve wall time (host preamble + compiled engine),
-        dispatched through the engine registry."""
+        dispatched through the engine registry; sets `cand.measured_us`
+        (and `cand.measure_note` when something noteworthy happened).
+
+        Hardened against flaky hosts: per-candidate sampling stops at the
+        `measure_timeout_s` deadline, and a sample spread wider than
+        `measure_outlier_ratio` triggers one re-measurement whose samples
+        are pooled in.  The recorded time is the pooled MINIMUM — the
+        standard microbenchmark noise floor, robust to one-sided timing
+        noise (a rep can only ever be measured too slow, never too fast).
+        """
         import time
         import jax.numpy as jnp
         from ..solver.engines import compile_source, resolve_engine
@@ -415,8 +450,31 @@ class StrategyPortfolio:
         b = np.random.default_rng(0).standard_normal(cand.ts.A.n_rows)
         c = jnp.asarray(cand.ts.preamble(b), dtype=cand.sched.dtype)
         jnp.asarray(fn(c)).block_until_ready()         # compile outside timer
-        t0 = time.perf_counter()
-        for _ in range(self.measure_iters):
-            cc = jnp.asarray(cand.ts.preamble(b), dtype=cand.sched.dtype)
-            jnp.asarray(fn(cc)).block_until_ready()
-        return (time.perf_counter() - t0) / self.measure_iters * 1e6
+
+        def sample_until(deadline: float) -> list:
+            out = []
+            for _ in range(self.measure_iters):
+                t0 = time.perf_counter()
+                cc = jnp.asarray(cand.ts.preamble(b), dtype=cand.sched.dtype)
+                jnp.asarray(fn(cc)).block_until_ready()
+                out.append((time.perf_counter() - t0) * 1e6)
+                if time.perf_counter() >= deadline:
+                    break
+            return out
+
+        deadline = time.perf_counter() + self.measure_timeout_s
+        samples = sample_until(deadline)
+        note = None
+        if len(samples) < self.measure_iters:
+            note = (f"timeout: {len(samples)}/{self.measure_iters} reps "
+                    f"within {self.measure_timeout_s:g}s")
+        elif max(samples) > self.measure_outlier_ratio * min(samples):
+            spread = max(samples) / min(samples)
+            samples += sample_until(
+                time.perf_counter() + self.measure_timeout_s)
+            note = (f"outliers (spread {spread:.1f}x > "
+                    f"{self.measure_outlier_ratio:g}x): re-measured, "
+                    f"{len(samples)} samples pooled")
+        cand.measured_us = min(samples)
+        cand.measure_note = note
+        return cand.measured_us

@@ -1,0 +1,291 @@
+"""Cross-cutting solve-path resilience: health policies, guards, retries.
+
+The stack below this module has per-component error paths (Manteuffel
+shift retries in `precond.factorize`, eager dtype/shape validation in
+`solver.engines`), but no shared story for the failure modes a production
+solve service actually meets: a non-finite right-hand side, a kernel that
+silently emits NaN, a preferred engine whose compile fails mid-request, a
+torn cache file from a crashed writer.  This module is that story's
+vocabulary — the typed error taxonomy, the configurable `HealthPolicy`,
+the `SolveGuard` that enforces it, and the declarative `RetryPolicy` the
+factorization retries share — consumed by:
+
+* `repro.solver.operator.TriangularOperator.solve` (+ `sptrsv`,
+  `Preconditioner.apply`): input/output health checks with
+  raise / fallback / repair actions,
+* `repro.solver.engines`: engine fallback chains (`engine_fallbacks`),
+  each downgrade warned and recorded in `OperatorStats`,
+* `repro.precond.factorize`: breakdown-shift retries via `RetryPolicy`,
+* `repro.solver.operator._disk_load/_disk_store`: atomic artifact writes
+  and quarantine of corrupt entries (`CacheQuarantineWarning`).
+
+Error taxonomy
+==============
+    ResilienceError(RuntimeError)
+    ├── NumericalHealthError     non-finite / inaccurate solve data; carries
+    │                            `.stage` ("input"|"output"|"residual"),
+    │                            `.where`, and `.fallbacks` attempted
+    └── EngineFallbackError      every engine in a fallback chain failed;
+                                 carries `.attempts` [(engine, reason), ...]
+
+    ResilienceWarning(UserWarning)
+    ├── EngineFallbackWarning    an engine was downgraded (never silent)
+    ├── HealthRepairWarning      a health violation was repaired/fallen back
+    └── CacheQuarantineWarning   a corrupt/stale cache entry was quarantined
+
+Health policy
+=============
+`HealthPolicy` is resolved per solve: an explicit `HealthPolicy` instance,
+a named level (`"off" | "on" | "strict" | "repair" | "fallback"`), or
+`None` for the `REPRO_HEALTH_CHECKS` environment default (same names;
+unset means `"on"`).  `"on"` checks input/output finiteness and raises
+typed errors; `"strict"` additionally verifies the relative residual
+against the original matrix; `"repair"` / `"fallback"` recover instead of
+raising (docs/robustness.md walks every knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+__all__ = [
+    "ResilienceError", "NumericalHealthError", "EngineFallbackError",
+    "ResilienceWarning", "EngineFallbackWarning", "HealthRepairWarning",
+    "CacheQuarantineWarning",
+    "HealthPolicy", "SolveGuard", "RetryPolicy", "resolve_health_policy",
+]
+
+
+# -- error taxonomy -----------------------------------------------------------
+
+
+class ResilienceError(RuntimeError):
+    """Base class for typed solve-path failures (module doc taxonomy)."""
+
+
+class NumericalHealthError(ResilienceError):
+    """A solve's data failed a health check.
+
+    stage:     "input" (non-finite right-hand side), "output" (non-finite
+               solution), or "residual" (finite but inaccurate solution).
+    where:     the component that detected it (operator repr, facade name).
+    fallbacks: recovery paths attempted before raising (empty when the
+               policy action is "raise").
+    """
+
+    def __init__(self, message: str, *, stage: str, where: str = "",
+                 fallbacks: tuple = ()):
+        self.stage = stage
+        self.where = where
+        self.fallbacks = tuple(fallbacks)
+        tail = f" (attempted fallbacks: {list(self.fallbacks)})" \
+            if self.fallbacks else ""
+        super().__init__(f"[{stage}] {message}{tail}")
+
+
+class EngineFallbackError(ResilienceError):
+    """Every engine in a fallback chain failed to compile or solve.
+
+    attempts: [(engine_name, reason), ...] in the order they were tried —
+    the error message names each one, so the failure is actionable.
+    """
+
+    def __init__(self, where: str, attempts: list):
+        self.where = where
+        self.attempts = list(attempts)
+        detail = "; ".join(f"{name}: {reason}" for name, reason in attempts)
+        super().__init__(
+            f"{where}: every engine in the fallback chain failed — {detail}")
+
+
+class ResilienceWarning(UserWarning):
+    """Base class for resilience-layer warnings (downgrades are loud)."""
+
+
+class EngineFallbackWarning(ResilienceWarning):
+    """A solve was downgraded to a fallback engine."""
+
+
+class HealthRepairWarning(ResilienceWarning):
+    """A health violation was repaired or recovered via fallback."""
+
+
+class CacheQuarantineWarning(ResilienceWarning):
+    """A corrupt/stale disk-cache entry was quarantined to `.bad/`."""
+
+
+# -- health policy ------------------------------------------------------------
+
+_NONFINITE_ACTIONS = ("raise", "fallback", "repair")
+HEALTH_ENV_VAR = "REPRO_HEALTH_CHECKS"
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """What SolveGuard checks and how violations are handled.
+
+    check_inputs:     reject non-finite right-hand sides (always an error:
+                      garbage in cannot be repaired).
+    check_outputs:    detect non-finite solutions.
+    on_nonfinite:     action for an unhealthy OUTPUT — "raise" a
+                      NumericalHealthError; "fallback" to the guaranteed
+                      host reference solve; "repair" by sanitizing +
+                      iterative refinement, escalating to the fallback if
+                      refinement cannot reach `residual_tol`.
+    residual_check:   additionally verify the relative residual
+                      max|b - Ax| / max(1, max|b|) against the ORIGINAL
+                      matrix on every solve (catches finite-but-wrong
+                      answers; costs one host matvec).
+    residual_tol:     threshold for the residual check and the repair
+                      target.  Intentionally looser than the refinement
+                      tolerance: it flags wrong answers, not last-ulp
+                      noise.
+    max_repair_rounds: refinement rounds "repair" may spend before
+                      escalating to the fallback.
+    """
+
+    check_inputs: bool = True
+    check_outputs: bool = True
+    on_nonfinite: str = "raise"
+    residual_check: bool = False
+    residual_tol: float = 1e-5
+    max_repair_rounds: int = 3
+
+    def __post_init__(self):
+        if self.on_nonfinite not in _NONFINITE_ACTIONS:
+            raise ValueError(
+                f"on_nonfinite must be one of {_NONFINITE_ACTIONS}, got "
+                f"{self.on_nonfinite!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.check_inputs or self.check_outputs or self.residual_check
+
+    @classmethod
+    def off(cls) -> "HealthPolicy":
+        return cls(check_inputs=False, check_outputs=False,
+                   residual_check=False)
+
+    @classmethod
+    def strict(cls) -> "HealthPolicy":
+        """Finiteness + residual verification, violations raise."""
+        return cls(residual_check=True)
+
+
+_NAMED_POLICIES = {
+    "off": HealthPolicy.off,
+    "0": HealthPolicy.off,
+    "on": HealthPolicy,
+    "1": HealthPolicy,
+    "strict": HealthPolicy.strict,
+    "repair": lambda: HealthPolicy(on_nonfinite="repair"),
+    "fallback": lambda: HealthPolicy(on_nonfinite="fallback"),
+}
+
+
+def resolve_health_policy(spec=None) -> HealthPolicy:
+    """Resolve a health spec: a HealthPolicy passes through, a named level
+    constructs one, None reads REPRO_HEALTH_CHECKS (default "on")."""
+    if isinstance(spec, HealthPolicy):
+        return spec
+    if spec is None:
+        spec = os.environ.get(HEALTH_ENV_VAR, "on").strip().lower() or "on"
+    if isinstance(spec, str):
+        try:
+            return _NAMED_POLICIES[spec.strip().lower()]()
+        except KeyError:
+            raise ValueError(
+                f"unknown health policy {spec!r}; expected one of "
+                f"{sorted(_NAMED_POLICIES)} or a HealthPolicy") from None
+    raise TypeError(f"health spec must be None, a named level, or a "
+                    f"HealthPolicy, got {type(spec).__name__}")
+
+
+class SolveGuard:
+    """Health validation for one solve component, per a HealthPolicy.
+
+    The guard only *detects* and *classifies* — recovery (reference
+    fallback, refinement repair) is the owning component's job, because it
+    alone holds the original matrix and the device pipeline.  See
+    `TriangularOperator.solve` for the canonical consumer.
+    """
+
+    def __init__(self, policy: HealthPolicy, where: str = "solve"):
+        self.policy = policy
+        self.where = where
+
+    def require_finite_input(self, b) -> None:
+        """Non-finite right-hand sides are always an error: no recovery
+        can reconstruct the caller's intent."""
+        if not self.policy.check_inputs:
+            return
+        if not np.isfinite(np.asarray(b)).all():
+            raise NumericalHealthError(
+                f"right-hand side contains NaN/Inf entries in {self.where}",
+                stage="input", where=self.where)
+
+    def output_unhealthy(self, x) -> str | None:
+        """Classify an output: None (healthy) or a reason string."""
+        if self.policy.check_outputs and \
+                not np.isfinite(np.asarray(x)).all():
+            return "solution contains NaN/Inf entries"
+        return None
+
+    def residual_unhealthy(self, resid: float) -> str | None:
+        """Classify a relative residual (NaN counts as unhealthy)."""
+        if not self.policy.residual_check:
+            return None
+        if not (resid <= self.policy.residual_tol):
+            return (f"relative residual {resid:.3e} exceeds "
+                    f"{self.policy.residual_tol:.1e}")
+        return None
+
+
+# -- declarative retry --------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Geometric-backoff retry shared by the flaky host-side paths.
+
+    One attempt runs with parameter 0.0; each retry grows the parameter
+    geometrically from `scale0` (Manteuffel diagonal shifts in
+    `precond.factorize`, where the parameter is the shift alpha — but the
+    policy is payload-agnostic: any `attempt(param)` callable works).
+
+    max_attempts: retries after the first attempt (0 = no retry; the
+                  first failure propagates).
+    scale0:       parameter of the first retry.
+    growth:       multiplier per further retry.
+    """
+
+    max_attempts: int = 20
+    scale0: float = 1e-3
+    growth: float = 2.0
+
+    def params(self):
+        """0.0, scale0, scale0*growth, ... — max_attempts + 1 values."""
+        yield 0.0
+        p = self.scale0
+        for _ in range(self.max_attempts):
+            yield p
+            p *= self.growth
+
+    def run(self, attempt, *, retry_on: tuple = (Exception,)):
+        """Run `attempt(param)` over the parameter ladder.
+
+        Returns (result, param, attempts) on the first success; re-raises
+        the last `retry_on` exception when the ladder is exhausted.  Other
+        exception types propagate immediately.
+        """
+        attempts = 0
+        last = None
+        for param in self.params():
+            attempts += 1
+            try:
+                return attempt(param), param, attempts
+            except retry_on as e:
+                last = e
+        raise last

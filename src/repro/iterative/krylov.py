@@ -31,7 +31,14 @@ Driver contract
 `SolveResult.residual_norms` carries the per-iteration history in a
 fixed-shape `(maxiter+1,) + batch` buffer (NaN beyond each column's last
 iteration — `jnp.nanmin` and friends compose); `iterations` counts the
-iterations each column actually ran.  When the preconditioner is a
+iterations each column actually ran.  `SolveResult.status` classifies each
+column's outcome — STATUS_CONVERGED, STATUS_MAXITER, or STATUS_BREAKDOWN
+(`status_labels` decodes) — and every driver detects a non-finite iterate
+INSIDE its `lax.while_loop`: a poisoned column (NaN/Inf from an unstable
+preconditioner, a singular operator, or a bad right-hand side) is frozen
+at its last healthy iterate and reported as a breakdown instead of
+silently returning a garbage x with converged=False (host-side health
+guards cannot see inside jit, so the drivers carry their own detection).  When the preconditioner is a
 `Preconditioner` object and the call runs outside jit, `stats` carries
 its metadata (factorization kind/shift/strategy + host-path operator
 counters; traced in-loop applications are not host-observable) — inside
@@ -49,7 +56,21 @@ import numpy as np
 
 from .operators import as_matvec, as_preconditioner
 
-__all__ = ["SolveResult", "cg", "bicgstab", "gmres"]
+__all__ = ["SolveResult", "cg", "bicgstab", "gmres",
+           "STATUS_MAXITER", "STATUS_CONVERGED", "STATUS_BREAKDOWN",
+           "STATUS_LABELS", "status_labels"]
+
+# per-column outcome codes carried in SolveResult.status (int32, jit-safe)
+STATUS_MAXITER = 0      # ran out of iterations without converging
+STATUS_CONVERGED = 1    # hit the residual target
+STATUS_BREAKDOWN = 2    # frozen at the last healthy iterate (non-finite
+#                         step, or a bicgstab rho/omega collapse)
+STATUS_LABELS = ("maxiter", "converged", "breakdown")
+
+
+def status_labels(status):
+    """Host-side decoder: a SolveResult.status array -> label strings."""
+    return np.asarray(STATUS_LABELS, dtype=object)[np.asarray(status)]
 
 
 class SolveResult(typing.NamedTuple):
@@ -61,6 +82,11 @@ class SolveResult(typing.NamedTuple):
     residual_norms: (maxiter+1,) + batch, residual 2-norms per iteration
                     (index 0 = initial residual), NaN-padded past each
                     column's final iteration.
+    status:         int32 per column — STATUS_CONVERGED, STATUS_MAXITER,
+                    or STATUS_BREAKDOWN (`status_labels` decodes).
+                    Breakdown columns are frozen at their last healthy
+                    iterate: `x` is finite and usable, just not converged.
+                    None when constructed without one (back-compat).
     stats:          preconditioner metadata dict (factorization kind,
                     shift, strategy, per-operator counters) when the call
                     ran outside jit with a Preconditioner object, else
@@ -74,6 +100,7 @@ class SolveResult(typing.NamedTuple):
     converged: typing.Any
     iterations: typing.Any
     residual_norms: typing.Any
+    status: typing.Any = None
     stats: typing.Any = None
 
     def final_residual(self):
@@ -151,35 +178,48 @@ def cg(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
     p = z
     rz = _vdot(r, z)
     done0 = rn0 <= target
+    brk0 = jnp.zeros(batch, dtype=bool)
     iters0 = jnp.zeros(batch, dtype=jnp.int32)
 
     def cond(state):
-        it, _, _, _, _, _, done, _ = state
-        return (it < maxiter) & ~done.all()
+        it, _, _, _, _, _, done, brk, _ = state
+        return (it < maxiter) & ~(done | brk).all()
 
     def body(state):
-        it, x, r, p, rz, hist, done, iters = state
+        it, x, r, p, rz, hist, done, brk, iters = state
+        stop = done | brk
         Ap = A(p)
-        alpha = jnp.where(done, 0.0, rz / _guard(_vdot(p, Ap))) \
+        alpha = jnp.where(stop, 0.0, rz / _guard(_vdot(p, Ap))) \
             .astype(b.dtype)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        rn = _norm(r)
-        hist = hist.at[it + 1].set(jnp.where(done, jnp.nan, rn))
-        iters = iters + jnp.where(done, 0, 1).astype(jnp.int32)
-        z = M(r)
-        rz_new = _vdot(r, z)
+        x_new = x + alpha * p
+        r_new = r - alpha * Ap
+        rn = _norm(r_new)
+        z = M(r_new)
+        rz_new = _vdot(r_new, z)
+        # a non-finite residual or curvature means this step poisoned the
+        # column (singular A, unstable M, overflow): freeze it at the last
+        # healthy iterate and report breakdown, never return garbage
+        bad = ~stop & ~(jnp.isfinite(rn) & jnp.isfinite(rz_new))
+        ok = ~stop & ~bad
+        x = jnp.where(ok, x_new, x)
+        r = jnp.where(ok, r_new, r)
+        hist = hist.at[it + 1].set(jnp.where(ok, rn, jnp.nan))
+        iters = iters + jnp.where(ok, 1, 0).astype(jnp.int32)
         beta = (rz_new / _guard(rz)).astype(b.dtype)
-        p = jnp.where(done, p, z + beta * p)
-        rz = jnp.where(done, rz, rz_new)
-        done = done | (rn <= target)
-        return it + 1, x, r, p, rz, hist, done, iters
+        p = jnp.where(ok, z + beta * p, p)
+        rz = jnp.where(ok, rz_new, rz)
+        done = done | (ok & (rn <= target))
+        brk = brk | bad
+        return it + 1, x, r, p, rz, hist, done, brk, iters
 
-    _, x, r, _, _, hist, done, iters = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), x, r, p, rz, hist, done0, iters0))
+    _, x, r, _, _, hist, done, brk, iters = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), x, r, p, rz, hist, done0, brk0, iters0))
+    status = jnp.where(done, STATUS_CONVERGED,
+                       jnp.where(brk, STATUS_BREAKDOWN,
+                                 STATUS_MAXITER)).astype(jnp.int32)
     return _attach_stats(
         SolveResult(x=x, converged=done, iterations=iters,
-                    residual_norms=hist), preconditioner)
+                    residual_norms=hist, status=status), preconditioner)
 
 
 def bicgstab(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
@@ -208,18 +248,19 @@ def bicgstab(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
     v = jnp.zeros_like(b)
     p = jnp.zeros_like(b)
     done0 = rn0 <= target
-    stop0 = done0                       # done-or-broke: stops the column
+    brk0 = jnp.zeros(batch, dtype=bool)
     iters0 = jnp.zeros(batch, dtype=jnp.int32)
     eps = jnp.asarray(np.finfo(np.dtype(b.dtype)).tiny * 1e3, b.dtype)
 
     def cond(state):
         it = state[0]
-        stop = state[-2]
-        return (it < maxiter) & ~stop.all()
+        done, brk = state[-3], state[-2]
+        return (it < maxiter) & ~(done | brk).all()
 
     def body(state):
-        (it, x, r, rhat, rho, alpha, omega, v, p, hist, done, stop,
+        (it, x, r, rhat, rho, alpha, omega, v, p, hist, done, brk,
          iters) = state
+        stop = done | brk
         rho_new = _vdot(rhat, r)
         broke = jnp.abs(rho_new) < eps
         beta = ((rho_new / _guard(rho)) * (alpha / _guard(omega))) \
@@ -237,31 +278,40 @@ def bicgstab(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
         tt = _vdot(t, t)
         omega_new = jnp.where(stop | broke, 0.0,
                               _vdot(t, s) / _guard(tt)).astype(b.dtype)
+        x_cand = x + alpha_new * phat + omega_new * shat
+        r_cand = s - omega_new * t
+        rn = _norm(r_cand)
+        # a non-finite candidate (unstable M, singular A, overflow) is a
+        # breakdown like rho/omega collapse: freeze the column at its last
+        # healthy iterate, never commit a poisoned x
+        broke = broke | ~jnp.isfinite(rn)
         upd = ~(stop | broke)
-        x = jnp.where(upd, x + alpha_new * phat + omega_new * shat, x)
-        r = jnp.where(upd, s - omega_new * t, r)
-        rn = _norm(r)
+        x = jnp.where(upd, x_cand, x)
+        r = jnp.where(upd, r_cand, r)
         # a breakdown step is NOT a productive iteration: x/r are frozen,
         # so record nothing and leave the count at the last real step
         hist = hist.at[it + 1].set(jnp.where(upd, rn, jnp.nan))
         iters = iters + jnp.where(upd, 1, 0).astype(jnp.int32)
-        v = jnp.where(stop, v, v_new)
-        rho = jnp.where(stop, rho, rho_new)
-        alpha = jnp.where(stop, alpha, alpha_new)
-        omega = jnp.where(stop, omega, omega_new)
-        done = done | (rn <= target)
-        stop = stop | done | broke
+        v = jnp.where(upd, v_new, v)
+        rho = jnp.where(upd, rho_new, rho)
+        alpha = jnp.where(upd, alpha_new, alpha)
+        omega = jnp.where(upd, omega_new, omega)
+        done = done | (upd & (rn <= target))
+        brk = brk | (~stop & broke)
         return (it + 1, x, r, rhat, rho, alpha, omega, v, p, hist, done,
-                stop, iters)
+                brk, iters)
 
     state = (jnp.int32(0), x, r, rhat, rho, alpha, omega, v, p, hist,
-             done0, stop0, iters0)
+             done0, brk0, iters0)
     state = jax.lax.while_loop(cond, body, state)
     _, x, r, *_rest = state
-    hist, done, _stop, iters = state[-4], state[-3], state[-2], state[-1]
+    hist, done, brk, iters = state[-4], state[-3], state[-2], state[-1]
+    status = jnp.where(done, STATUS_CONVERGED,
+                       jnp.where(brk, STATUS_BREAKDOWN,
+                                 STATUS_MAXITER)).astype(jnp.int32)
     return _attach_stats(
         SolveResult(x=x, converged=done, iterations=iters,
-                    residual_norms=hist), preconditioner)
+                    residual_norms=hist, status=status), preconditioner)
 
 
 def gmres(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
@@ -363,11 +413,12 @@ def gmres(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
 
     def outer_cond(state):
         cycle = state[0]
-        done = state[-1]
-        return (cycle < maxiter) & ~done.all()
+        done, brk = state[-2], state[-1]
+        return (cycle < maxiter) & ~(done | brk).all()
 
     def outer_body(state):
-        cycle, x, r, rn, hist, iters, done = state
+        cycle, x, r, rn, hist, iters, done, brk = state
+        iters_in = iters        # rollback point for a poisoned cycle
         beta = rn
         V = jnp.zeros((m + 1, n) + batch, dtype=b.dtype)
         V = V.at[0].set(r / _guard(beta))
@@ -375,7 +426,7 @@ def gmres(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
         cs = jnp.zeros((m + 1,) + batch, dtype=b.dtype)
         sn = jnp.zeros((m + 1,) + batch, dtype=b.dtype)
         g = jnp.zeros((m + 1,) + batch, dtype=b.dtype).at[0].set(beta)
-        carry = (V, H, cs, sn, g, hist, done, iters, cycle)
+        carry = (V, H, cs, sn, g, hist, done | brk, iters, cycle)
         V, H, cs, sn, g, hist, _, iters, _ = jax.lax.fori_loop(
             0, m, inner_body, carry)
         # back-substitute H y = g on the m x m triangle; columns the cycle
@@ -389,15 +440,30 @@ def gmres(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
             return y.at[i].set(jnp.where(jnp.abs(H[i, i]) > 0, yi, 0.0))
 
         y = jax.lax.fori_loop(0, m, back_body, y)
-        x = x + (y[:, None] * V[:m]).sum(axis=0)
-        r = M(b - A(x))
-        rn = _norm(r)
-        done = done | (rn <= target)
-        return cycle + 1, x, r, rn, hist, iters, done
+        x_new = x + (y[:, None] * V[:m]).sum(axis=0)
+        r_new = M(b - A(x_new))
+        rn_new = _norm(r_new)
+        # a non-finite recomputed residual means the cycle poisoned the
+        # column (unstable M, singular A, NaN rhs): roll x and the
+        # iteration count back to the cycle start and report breakdown
+        active = ~(done | brk)
+        bad = active & ~jnp.isfinite(rn_new)
+        ok = active & ~bad
+        x = jnp.where(ok, x_new, x)
+        r = jnp.where(ok, r_new, r)
+        rn = jnp.where(ok, rn_new, rn)
+        iters = jnp.where(bad, iters_in, iters)
+        done = done | (ok & (rn_new <= target))
+        brk = brk | bad
+        return cycle + 1, x, r, rn, hist, iters, done, brk
 
-    state = (jnp.int32(0), x, r, rn0, hist, iters0, done0)
-    _, x, r, rn, hist, iters, done = jax.lax.while_loop(
+    brk0 = jnp.zeros(batch, dtype=bool)
+    state = (jnp.int32(0), x, r, rn0, hist, iters0, done0, brk0)
+    _, x, r, rn, hist, iters, done, brk = jax.lax.while_loop(
         outer_cond, outer_body, state)
+    status = jnp.where(done, STATUS_CONVERGED,
+                       jnp.where(brk, STATUS_BREAKDOWN,
+                                 STATUS_MAXITER)).astype(jnp.int32)
     return _attach_stats(
         SolveResult(x=x, converged=done, iterations=iters,
-                    residual_norms=hist), preconditioner)
+                    residual_norms=hist, status=status), preconditioner)

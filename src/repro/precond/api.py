@@ -297,7 +297,7 @@ class Preconditioner:
         return self.forward, self.backward
 
     def apply(self, r: np.ndarray, *, engine=None, max_refine: int = 0,
-              refine_tol: float = 1e-10) -> np.ndarray:
+              refine_tol: float = 1e-10, health=None) -> np.ndarray:
         """z = M^-1 r on host: forward sweep then backward sweep.
 
         Refinement defaults OFF (max_refine=0): M^-1 is approximate by
@@ -306,11 +306,21 @@ class Preconditioner:
         sweeps themselves then run fp64-copy-free in the schedule dtype;
         only the returned z is cast up, preserving the facade's
         numpy-in / float64-numpy-out contract (module doc).
+
+        health: solve-path health policy (HealthPolicy, a named level, or
+        None for the REPRO_HEALTH_CHECKS environment default), applied to
+        BOTH sweeps — a non-finite r raises a typed NumericalHealthError
+        before any device work, a poisoned sweep raises / repairs / falls
+        back per the policy, and engine failures walk the registry
+        fallback chain (see TriangularOperator.solve, docs/robustness.md).
+        Note the residual level of "strict" checks each triangular sweep
+        against its own factor, not M^-1 against A — that approximation
+        gap is by construction.
         """
         z = self.forward.solve(r, engine=engine, max_refine=max_refine,
-                               refine_tol=refine_tol)
+                               refine_tol=refine_tol, health=health)
         z = self.backward.solve(z, engine=engine, max_refine=max_refine,
-                                refine_tol=refine_tol)
+                                refine_tol=refine_tol, health=health)
         return np.asarray(z, dtype=np.float64)
 
     def device_apply(self, engine=None):

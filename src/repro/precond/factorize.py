@@ -37,7 +37,9 @@ restarts on `A + alpha * diag(|A|)` with `alpha` growing geometrically from
 `shift0` until the factorization completes; `FactorResult.shift` records
 the alpha actually needed (0.0 in the common diagonally-dominant case).
 `max_shift_attempts=0` disables shifting — breakdown then raises
-`FactorizationBreakdown`.
+`FactorizationBreakdown`.  Both factorizations share one declarative
+ladder — `repro.core.resilience.RetryPolicy(max_attempts=max_shift_attempts,
+scale0=shift0)` — so the retry semantics cannot drift between them.
 
 `ic0` validates its input (symmetric pattern + values, positive diagonal)
 and rejects non-SPD-shaped matrices with a ValueError; pass
@@ -53,6 +55,7 @@ import dataclasses
 
 import numpy as np
 
+from ..core.resilience import RetryPolicy
 from ..sparse.csr import CSR, from_coo, tril
 from ..sparse.levels import build_levels
 
@@ -314,17 +317,11 @@ def ic0(A: CSR, *, shift0: float = 1e-3, max_shift_attempts: int = 20,
     plan = _IC0Plan(low)
     base = _shift_base(low.data[plan.dpos],
                        float(np.abs(low.data).max(initial=0.0)))
-    alpha, attempts = 0.0, 0
-    while True:
-        attempts += 1
-        try:
-            data = _ic0_sweep(plan, _shifted(low.data, plan.dpos, alpha,
-                                             base), breakdown_rtol)
-            break
-        except FactorizationBreakdown:
-            if attempts > max_shift_attempts:
-                raise
-            alpha = shift0 if alpha == 0.0 else 2.0 * alpha
+    data, alpha, attempts = RetryPolicy(
+        max_attempts=max_shift_attempts, scale0=shift0).run(
+        lambda a: _ic0_sweep(plan, _shifted(low.data, plan.dpos, a, base),
+                             breakdown_rtol),
+        retry_on=(FactorizationBreakdown,))
     L = CSR(indptr=low.indptr, indices=low.indices, data=data,
             shape=low.shape)
     return FactorResult(kind="ic0", L=L, U=None, shift=alpha,
@@ -434,17 +431,11 @@ def ilu0(A: CSR, *, shift0: float = 1e-3, max_shift_attempts: int = 20,
     plan = _ILU0Plan(A)
     base = _shift_base(A.data[plan.dpos],
                        float(np.abs(A.data).max(initial=0.0)))
-    alpha, attempts = 0.0, 0
-    while True:
-        attempts += 1
-        try:
-            data = _ilu0_sweep(plan, _shifted(A.data, plan.dpos, alpha,
-                                              base), breakdown_rtol)
-            break
-        except FactorizationBreakdown:
-            if attempts > max_shift_attempts:
-                raise
-            alpha = shift0 if alpha == 0.0 else 2.0 * alpha
+    data, alpha, attempts = RetryPolicy(
+        max_attempts=max_shift_attempts, scale0=shift0).run(
+        lambda a: _ilu0_sweep(plan, _shifted(A.data, plan.dpos, a, base),
+                              breakdown_rtol),
+        retry_on=(FactorizationBreakdown,))
     n = A.n_rows
     rows = np.repeat(np.arange(n), A.row_nnz())
     low_mask = A.indices < rows

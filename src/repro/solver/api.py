@@ -62,10 +62,11 @@ class _BoundSolve:
     """
 
     def __init__(self, op: TriangularOperator, refine_tol: float,
-                 max_refine: int):
+                 max_refine: int, health=None):
         self.op = op
         self.refine_tol = refine_tol
         self.max_refine = max_refine
+        self.health = health
         self._adjoint = None
         self._flipped = None
 
@@ -80,7 +81,8 @@ class _BoundSolve:
         one's forward op — so the backward pass is itself differentiable
         (grad-of-grad composes to any order)."""
         if self._flipped is None:
-            f = _BoundSolve(self.adjoint, self.refine_tol, self.max_refine)
+            f = _BoundSolve(self.adjoint, self.refine_tol, self.max_refine,
+                            health=self.health)
             f._adjoint = self.op
             f._flipped = self
             self._flipped = f
@@ -92,7 +94,7 @@ class _BoundSolve:
         # returned array is cast up — sptrsv's numpy path contract is
         # float64 out either way
         x = self.op.solve(np.asarray(b), refine_tol=self.refine_tol,
-                          max_refine=self.max_refine)
+                          max_refine=self.max_refine, health=self.health)
         return np.asarray(x, dtype=np.float64)
 
 
@@ -136,7 +138,7 @@ def sptrsv(A: CSR, b, *, lower: bool = True, transpose: bool = False,
            mesh_axis: str = "model", tune="no_rewriting",
            chunk: int = 256, max_deps: int = 16, dtype=np.float32,
            cache: bool = True, cache_dir=None, refine_tol: float = 1e-10,
-           max_refine: int = 6):
+           max_refine: int = 6, health=None):
     """Solve the triangular system `op(A) x = b` (module doc for the map
     of sweeps).
 
@@ -157,6 +159,12 @@ def sptrsv(A: CSR, b, *, lower: bool = True, transpose: bool = False,
             strategy name, a Strategy instance, or "auto" for the
             portfolio auto-tuner.
     cache:  reuse/persist the compiled operator artifact across calls.
+    health: solve-path health policy — a `repro.core.HealthPolicy`, a
+            named level ("off" | "on" | "strict" | "repair" | "fallback"),
+            or None for the REPRO_HEALTH_CHECKS environment default.
+            Applies to every host solve this call performs, backward
+            (adjoint) passes included; see TriangularOperator.solve and
+            docs/robustness.md.
     """
     if unit_diagonal:
         A = with_unit_diagonal(A)
@@ -165,7 +173,8 @@ def sptrsv(A: CSR, b, *, lower: bool = True, transpose: bool = False,
         transpose=bool(transpose), chunk=chunk, max_deps=max_deps,
         dtype=dtype, engine=engine, mesh=mesh, mesh_axis=mesh_axis,
         cache=cache, cache_dir=cache_dir)
-    bound = _BoundSolve(op, refine_tol=refine_tol, max_refine=max_refine)
+    bound = _BoundSolve(op, refine_tol=refine_tol, max_refine=max_refine,
+                        health=health)
     try:
         import jax
         is_jax = isinstance(b, jax.Array)

@@ -41,7 +41,8 @@ __all__ = ["Engine", "ScanEngine", "UnrolledEngine", "PallasEngine",
            "ShardedEngine", "sharded_engine", "compile_source",
            "register_engine", "resolve_engine", "get_engine",
            "registered_engines", "available_engines", "default_engine",
-           "default_interpret", "engine_capabilities", "DEFAULT_ENGINE"]
+           "default_interpret", "engine_capabilities", "DEFAULT_ENGINE",
+           "engine_fallbacks", "set_fallback_chain", "fallback_chains"]
 
 DEFAULT_ENGINE = "scan"
 
@@ -273,6 +274,47 @@ class ShardedEngine(Engine):
         while len(self._lowered) > self._lowered_max:
             self._lowered.popitem(last=False)
         return fn
+
+
+# -- fallback chains ----------------------------------------------------------
+
+# engine name -> ordered degradation chain tried when the preferred engine
+# is unavailable or its compile/solve raises (repro.core.resilience:
+# EngineFallbackWarning on every downgrade, EngineFallbackError when the
+# whole chain fails — never a silent substitution).  The scan engine is
+# the terminal fallback everywhere: pure lax.scan, no Pallas, no mesh, no
+# dtype restrictions — the most conservative compiled path in the repo.
+_FALLBACK_CHAINS: dict[str, tuple] = {
+    "pallas": ("scan",),
+    "pallas-interpret": ("scan",),
+    "sharded": ("scan",),
+    "unrolled": ("scan",),
+}
+
+
+def fallback_chains() -> dict:
+    """Copy of the configured name -> chain map (docs/robustness.md)."""
+    return dict(_FALLBACK_CHAINS)
+
+
+def set_fallback_chain(name: str, chain) -> None:
+    """Configure the degradation chain for an engine name.  `chain` is an
+    ordered iterable of registered engine names; an empty chain means
+    "fail fast, no downgrade"."""
+    _FALLBACK_CHAINS[name] = tuple(chain)
+
+
+def engine_fallbacks(engine) -> tuple:
+    """The resolved degradation chain for an engine: registered Engine
+    instances, in order, the engine itself excluded.  Names in the chain
+    that are not registered are skipped (a chain must never raise during
+    resolution — it is consulted on the failure path)."""
+    out = []
+    for name in _FALLBACK_CHAINS.get(getattr(engine, "name", None), ()):
+        eng = _REGISTRY.get(name)
+        if eng is not None and eng is not engine and eng not in out:
+            out.append(eng)
+    return tuple(out)
 
 
 # -- registry -----------------------------------------------------------------

@@ -39,6 +39,30 @@ the operator match the sequential reference to ~1e-10 relative.
 
 Per-solve stats (wall time, refinement rounds, residuals) are recorded on
 `op.stats`.
+
+Resilience (docs/robustness.md)
+===============================
+Every host `solve()` runs under a `SolveGuard` (repro.core.resilience):
+non-finite right-hand sides raise a typed `NumericalHealthError`; a
+non-finite (or, under `health="strict"`, inaccurate) solution is raised,
+repaired by sanitize-and-refine, or replaced by the guaranteed host
+reference solve per the resolved `HealthPolicy` (`health=` argument, else
+the `REPRO_HEALTH_CHECKS` environment default).  When the preferred
+engine's compile or solve fails — Pallas unavailable, dtype capability
+rejected, mesh devices lost — the solve walks the registry's fallback
+chain (`engines.engine_fallbacks`, e.g. pallas -> scan); every downgrade
+is recorded in `OperatorStats` and surfaced as an `EngineFallbackWarning`,
+and a chain with no survivor raises `EngineFallbackError` naming each
+attempt.  `device_solve_fn` is the raw traced pipeline and is NOT
+guarded — host-side checks cannot observe jitted applications (the
+jit-native Krylov drivers carry their own in-loop breakdown detection).
+
+Disk artifacts are crash- and concurrency-safe: writes go to a uniquely
+named temporary sibling and publish via atomic `os.replace`, so a reader
+can never observe a torn pickle; entries that still fail to load (corrupt
+bytes, stale CACHE_VERSION) are quarantined to a `.bad/` sibling
+directory — preserved for diagnosis, never silently deleted — with a
+`CacheQuarantineWarning`, and the artifact is rebuilt.
 """
 from __future__ import annotations
 
@@ -48,6 +72,8 @@ import hashlib
 import os
 import pickle
 import time
+import uuid
+import warnings
 from pathlib import Path
 
 import numpy as np
@@ -153,6 +179,10 @@ class OperatorStats:
     last_residual: float = float("nan")
     cache_source: str = "built"        # "built" | "memory" | "disk"
     tune_ms: float = 0.0
+    fallbacks: int = 0                 # solves served by a downgraded engine
+    last_fallback: str = ""            # "requested->used"
+    health_events: int = 0             # health violations detected
+    last_health_event: str = ""        # "stage:action", e.g. "output:reference"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -375,10 +405,33 @@ class TriangularOperator:
             with open(path, "rb") as f:
                 payload = pickle.load(f)
             if payload.get("version") != CACHE_VERSION:
+                cls._quarantine(
+                    path, f"stale version {payload.get('version')!r} "
+                    f"(expected {CACHE_VERSION})")
                 return None
             return payload
-        except Exception:
-            return None     # corrupt cache entries are silently rebuilt
+        except Exception as e:          # corrupt entry: quarantine + rebuild
+            cls._quarantine(path, f"unreadable ({type(e).__name__}: {e})")
+            return None
+
+    @staticmethod
+    def _quarantine(path: Path, reason: str) -> None:
+        """Move a bad cache entry into a `.bad/` sibling directory — kept
+        for diagnosis, never silently deleted — and warn; the caller then
+        rebuilds the artifact.  A quarantine that itself fails (read-only
+        dir, racing quarantiners) is non-fatal: the rebuild proceeds and
+        the next atomic store overwrites the bad entry in place."""
+        from ..core.resilience import CacheQuarantineWarning
+        dest = path.parent / ".bad" / path.name
+        try:
+            dest.parent.mkdir(parents=True, exist_ok=True)
+            os.replace(path, dest)
+            placed = f"quarantined to {dest}"
+        except OSError:
+            placed = "left in place (quarantine move failed)"
+        warnings.warn(
+            f"disk cache entry {path.name} is {reason}; {placed}, "
+            "rebuilding the artifact", CacheQuarantineWarning, stacklevel=4)
 
     @classmethod
     def _disk_store(cls, key: str, payload: dict, cache_dir) -> None:
@@ -388,10 +441,18 @@ class TriangularOperator:
         payload = {k: v for k, v in payload.items() if not k.startswith("_")}
         try:
             path.parent.mkdir(parents=True, exist_ok=True)
-            tmp = path.with_suffix(".tmp")
-            with open(tmp, "wb") as f:
-                pickle.dump(payload, f)
-            os.replace(tmp, path)       # atomic vs concurrent builders
+            # unique tmp name per writer: concurrent builders of the same
+            # key each publish a complete file via atomic os.replace, so a
+            # reader can never observe a torn pickle (last writer wins)
+            tmp = path.parent / (
+                f"{path.name}.{os.getpid()}-{uuid.uuid4().hex[:8]}.tmp")
+            try:
+                with open(tmp, "wb") as f:
+                    pickle.dump(payload, f)
+                os.replace(tmp, path)
+            except BaseException:
+                tmp.unlink(missing_ok=True)
+                raise
         except OSError:
             pass        # read-only cache dir: operator still works, unseeded
 
@@ -538,8 +599,148 @@ class TriangularOperator:
             x = x.astype(out_dtype)
         return x[::-1] if self._reversed else x
 
+    def _reference_solve(self, b: np.ndarray) -> np.ndarray:
+        """Guaranteed host solve of this sweep in float64 — scipy's
+        `spsolve_triangular` when available, else the sequential reference
+        loop — built directly from the ORIGINAL matrix, so it cannot be
+        poisoned by a bad schedule payload or a failing engine.  The health
+        policy's "fallback"/"repair" escape hatch (never the serving path:
+        it is host-sequential and slow)."""
+        entry = self._runtime.get("ref_system")
+        if entry is None:
+            L_eff, rev = orient_lower(self._L, self.side, self.transpose)
+            try:
+                import scipy.sparse as sp
+                mat = sp.csr_matrix(
+                    (np.asarray(L_eff.data, dtype=np.float64),
+                     L_eff.indices, L_eff.indptr), shape=L_eff.shape)
+                entry = ("scipy", mat, rev)
+            except ImportError:  # pragma: no cover - scipy ships in the env
+                entry = ("seq", L_eff, rev)
+            self._runtime["ref_system"] = entry
+        kind, mat, rev = entry
+        v = np.asarray(b, dtype=np.float64)
+        if rev:
+            v = v[::-1]
+        if kind == "scipy":
+            from scipy.sparse.linalg import spsolve_triangular
+            x = spsolve_triangular(mat, v, lower=True)
+        else:
+            from .reference import solve_csr_seq
+            x = solve_csr_seq(mat, v) if v.ndim == 1 else np.stack(
+                [solve_csr_seq(mat, v[:, j]) for j in range(v.shape[1])],
+                axis=1)
+        return np.asarray(x[::-1] if rev else x, dtype=np.float64)
+
+    def _relative_residual(self, b, x) -> float:
+        b64 = np.asarray(b, dtype=np.float64)
+        r = b64 - self._L.matvec(np.asarray(x, dtype=np.float64),
+                                 transpose=self.transpose)
+        scale = max(1.0, float(np.abs(b64).max(initial=0.0)))
+        return float(np.abs(r).max(initial=0.0)) / scale
+
+    def _fallback_solve(self, v, eng, out_dtype=None):
+        """`_oriented_solve` through `eng`, walking the registry's fallback
+        chain (engines.engine_fallbacks) when an engine is unavailable or
+        its compile/solve raises.  Returns (x, engine_used).
+
+        Failures are memoized on the shared payload, so a known-broken
+        engine is not re-tried on every solve of a hot operator; each
+        downgrade bumps `stats.fallbacks` and warns once per
+        (requested, used) pair; an exhausted chain raises
+        EngineFallbackError naming every attempt and its reason.
+        """
+        from ..core.resilience import EngineFallbackError
+        from .engines import engine_fallbacks
+        failures = self._runtime.setdefault("engine_failures", {})
+        attempts = []
+        for cand in (eng, *engine_fallbacks(eng)):
+            known = failures.get(cand.name)
+            if known is not None:
+                attempts.append((cand.name, f"previously failed ({known})"))
+                continue
+            try:
+                if not cand.available():
+                    raise RuntimeError("engine reports unavailable")
+                x = self._oriented_solve(v, cand, out_dtype=out_dtype)
+            except Exception as e:  # compile, lowering, or solve failure
+                reason = f"{type(e).__name__}: {e}"
+                failures[cand.name] = reason
+                attempts.append((cand.name, reason))
+                continue
+            if attempts:            # served, but not by the requested engine
+                self._note_fallback(eng, cand, attempts)
+            return x, cand
+        raise EngineFallbackError(
+            f"TriangularOperator(n={self.n}, engine={eng.name!r})", attempts)
+
+    def _note_fallback(self, requested, used, attempts) -> None:
+        st = self.stats
+        st.fallbacks += 1
+        st.last_fallback = f"{requested.name}->{used.name}"
+        warned = self._runtime.setdefault("warned_fallbacks", set())
+        pair = (requested.name, used.name)
+        if pair not in warned:      # warn once per pair, count every event
+            warned.add(pair)
+            from ..core.resilience import EngineFallbackWarning
+            detail = "; ".join(f"{n}: {r}" for n, r in attempts)
+            warnings.warn(
+                f"engine {requested.name!r} failed, solve downgraded to "
+                f"{used.name!r} [{detail}]", EngineFallbackWarning,
+                stacklevel=4)
+
+    def _health_recover(self, b, x, reason, stage, guard, eng):
+        """Apply the policy's on_nonfinite action to an unhealthy solve:
+        "repair" sanitizes non-finite entries and iteratively refines
+        through the device chain, escalating to the host reference after
+        max_repair_rounds; "fallback" goes straight to the reference;
+        anything else (or an unrecoverable solve) raises a typed
+        NumericalHealthError naming what was attempted."""
+        from ..core.resilience import (HealthRepairWarning,
+                                       NumericalHealthError, ResilienceError)
+        policy, st = guard.policy, self.stats
+        st.health_events += 1
+        attempted = []
+        if policy.on_nonfinite == "repair":
+            attempted.append("repair")
+            xr = np.where(np.isfinite(x), x, 0.0).astype(np.float64)
+            for _ in range(policy.max_repair_rounds):
+                r = b - self._L.matvec(xr, transpose=self.transpose)
+                if not np.isfinite(r).all():
+                    break
+                try:
+                    xr = xr + self._fallback_solve(r, eng,
+                                                   out_dtype=np.float64)[0]
+                except ResilienceError:
+                    break       # no usable device engine: escalate
+                if not np.isfinite(xr).all():
+                    break       # corrections are poisoned too: escalate
+                resid = self._relative_residual(b, xr)
+                if resid <= policy.residual_tol:
+                    st.last_health_event = f"{stage}:repaired"
+                    warnings.warn(
+                        f"unhealthy solve ({reason}) repaired by iterative "
+                        f"refinement in {guard.where}", HealthRepairWarning,
+                        stacklevel=3)
+                    return xr, resid
+        if policy.on_nonfinite in ("repair", "fallback"):
+            attempted.append("reference")
+            xref = self._reference_solve(b)
+            if np.isfinite(xref).all():
+                resid = self._relative_residual(b, xref)
+                st.last_health_event = f"{stage}:reference"
+                warnings.warn(
+                    f"unhealthy solve ({reason}) recovered via the host "
+                    f"reference solve in {guard.where}", HealthRepairWarning,
+                    stacklevel=3)
+                return xref, resid
+        st.last_health_event = f"{stage}:raised"
+        raise NumericalHealthError(reason, stage=stage, where=guard.where,
+                                   fallbacks=attempted)
+
     def solve(self, b: np.ndarray, *, engine=None,
-              refine_tol: float = 1e-10, max_refine: int = 6) -> np.ndarray:
+              refine_tol: float = 1e-10, max_refine: int = 6,
+              health=None) -> np.ndarray:
         """Solve the operator's sweep (L, L^T, U, or U^T) x = b for b of
         shape (n,) or batched (n, k).
 
@@ -555,13 +756,28 @@ class TriangularOperator:
         float64 host copy, and the result comes back in the schedule
         dtype's natural output (float32 by default) — the raw device
         pipeline, exactly what refinement-free serving wants.
+
+        health: a HealthPolicy, a named level ("off" | "on" | "strict" |
+        "repair" | "fallback"), or None for the REPRO_HEALTH_CHECKS
+        environment default ("on").  Controls the SolveGuard around this
+        solve — a non-finite b raises NumericalHealthError; an unhealthy
+        solution is raised, repaired, or replaced by the host reference
+        solve; engine failures walk the registry fallback chain (module
+        doc; docs/robustness.md).  Health recoveries return float64
+        regardless of max_refine.
         """
+        from ..core.resilience import (EngineFallbackError,
+                                       HealthRepairWarning, SolveGuard,
+                                       resolve_health_policy)
         from .engines import resolve_engine
         eng = self._engine if engine is None else resolve_engine(engine)
         if eng is None:     # payload names a custom engine we don't hold
             raise ValueError(
                 "operator has no resolvable default engine "
                 f"({self._engine_name!r}); pass engine= explicitly")
+        policy = resolve_health_policy(health)
+        guard = SolveGuard(policy, where=f"TriangularOperator(n={self.n}, "
+                                         f"engine={eng.name!r})")
         # refinement-off solves skip the float64 promotion entirely: no
         # fp64 copy of b, no fp64 cast of the device result
         b = np.asarray(b, dtype=np.float64) if max_refine > 0 \
@@ -569,20 +785,51 @@ class TriangularOperator:
         if b.ndim not in (1, 2) or b.shape[0] != self.n:
             raise ValueError(f"b must be ({self.n},) or ({self.n}, k), "
                              f"got {b.shape}")
+        guard.require_finite_input(b)
         t0 = time.perf_counter()
-        x = self._oriented_solve(
-            b, eng, out_dtype=np.float64 if max_refine > 0 else None)
         resid = float("nan")
         rounds = 0
-        if max_refine > 0:          # refinement off => skip the host matvec
+        served_by_reference = False
+        try:
+            x, eng = self._fallback_solve(
+                b, eng, out_dtype=np.float64 if max_refine > 0 else None)
+        except EngineFallbackError:
+            # no device engine survived the chain; a recovering policy may
+            # still serve the solve from the host reference
+            if policy.on_nonfinite == "raise":
+                raise
+            st = self.stats
+            st.health_events += 1
+            st.last_health_event = "engine:reference"
+            warnings.warn(
+                "every engine in the fallback chain failed; solve served "
+                f"by the host reference in {guard.where}",
+                HealthRepairWarning, stacklevel=2)
+            x = self._reference_solve(b)
+            served_by_reference = True
+        if served_by_reference:
+            resid = self._relative_residual(b, x)
+        elif max_refine > 0:        # refinement off => skip the host matvec
             bscale = max(1.0, float(np.abs(b).max(initial=0.0)))
             while True:
                 r = b - self._L.matvec(x, transpose=self.transpose)
                 resid = float(np.abs(r).max(initial=0.0)) / bscale
+                if not np.isfinite(resid):
+                    break   # poisoned pipeline: corrections would be NaN
+                            # too — the health action below decides
                 if resid <= refine_tol or rounds >= max_refine:
                     break
-                x = x + self._oriented_solve(r, eng, out_dtype=np.float64)
+                x = x + self._fallback_solve(r, eng, out_dtype=np.float64)[0]
                 rounds += 1
+        if not served_by_reference:
+            reason, stage = guard.output_unhealthy(x), "output"
+            if reason is None and policy.residual_check:
+                if not np.isfinite(resid):  # nan: unset (max_refine=0) or
+                    resid = self._relative_residual(b, x)   # poisoned
+                reason, stage = guard.residual_unhealthy(resid), "residual"
+            if reason is not None:
+                x, resid = self._health_recover(b, x, reason, stage, guard,
+                                                eng)
         ms = (time.perf_counter() - t0) * 1e3
         st = self.stats
         st.solves += 1

@@ -1,0 +1,472 @@
+"""Chaos suite: every injected fault class must recover or raise a typed
+error — zero silent wrong answers (ISSUE 6 tentpole).
+
+Each test injects one failure mode through `repro.core.faults` (poisoned
+schedule payloads, corrupt cache pickles, failing engine compiles, lost
+meshes, breakdown pivots) and asserts the resilience layer's contract:
+recovered solves match the scipy oracle bit-for-tolerance, downgrades are
+recorded in OperatorStats and warned, and unrecoverable faults raise
+NumericalHealthError / EngineFallbackError / FactorizationBreakdown with
+actionable detail.  Run standalone via the `chaos` marker:
+
+    pytest -m chaos tests/test_resilience.py
+"""
+import os
+import pickle
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.resilience import (CacheQuarantineWarning,
+                                   EngineFallbackError,
+                                   EngineFallbackWarning, HealthPolicy,
+                                   HealthRepairWarning, NumericalHealthError,
+                                   RetryPolicy, resolve_health_policy)
+from repro.solver import TriangularOperator, sptrsv
+from repro.solver.operator import CACHE_VERSION
+from repro.sparse import generators
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memory_cache():
+    TriangularOperator.clear_memory_cache()
+    yield
+    TriangularOperator.clear_memory_cache()
+
+
+@pytest.fixture(scope="module")
+def L_small():
+    return generators.random_lower(120, avg_offdiag=2.5, seed=0, max_back=20)
+
+
+@pytest.fixture(scope="module")
+def b_small(L_small):
+    return np.random.default_rng(1).standard_normal(L_small.n_rows)
+
+
+def _oracle(L, b):
+    import scipy.sparse as sp
+    from scipy.sparse.linalg import spsolve_triangular
+    mat = sp.csr_matrix((np.asarray(L.data, np.float64), L.indices,
+                         L.indptr), shape=L.shape)
+    return spsolve_triangular(mat, np.asarray(b, np.float64), lower=True)
+
+
+# -- health policy resolution -------------------------------------------------
+
+
+def test_policy_resolution_named_and_env(monkeypatch):
+    assert resolve_health_policy("off") == HealthPolicy.off()
+    assert resolve_health_policy("strict").residual_check
+    assert resolve_health_policy("repair").on_nonfinite == "repair"
+    p = HealthPolicy(residual_tol=1e-3)
+    assert resolve_health_policy(p) is p
+    monkeypatch.setenv("REPRO_HEALTH_CHECKS", "fallback")
+    assert resolve_health_policy(None).on_nonfinite == "fallback"
+    monkeypatch.delenv("REPRO_HEALTH_CHECKS")
+    assert resolve_health_policy(None) == HealthPolicy()       # default "on"
+    with pytest.raises(ValueError, match="unknown health policy"):
+        resolve_health_policy("bogus")
+    with pytest.raises(TypeError):
+        resolve_health_policy(1.5)
+    with pytest.raises(ValueError, match="on_nonfinite"):
+        HealthPolicy(on_nonfinite="explode")
+
+
+# -- input / output health guards ---------------------------------------------
+
+
+def test_nonfinite_rhs_raises_typed_input_error(L_small, b_small):
+    op = TriangularOperator.from_csr(L_small, cache=False)
+    bad = np.array(b_small)
+    bad[3] = np.nan
+    with pytest.raises(NumericalHealthError, match="right-hand side") as ei:
+        op.solve(bad)
+    assert ei.value.stage == "input"
+    bad[3] = np.inf
+    with pytest.raises(NumericalHealthError):
+        op.solve(bad)
+    assert op.stats.solves == 0         # rejected before any device work
+
+
+def test_poisoned_payload_raises_by_default(L_small, b_small):
+    with faults.nan_schedule_payload():
+        op = TriangularOperator.from_csr(L_small, cache=False)
+        with pytest.raises(NumericalHealthError) as ei:
+            op.solve(b_small)
+    assert ei.value.stage == "output"
+    assert op.stats.last_health_event == "output:raised"
+
+
+def test_poisoned_payload_fallback_matches_oracle(L_small, b_small):
+    x_ref = _oracle(L_small, b_small)
+    with faults.nan_schedule_payload():
+        op = TriangularOperator.from_csr(L_small, cache=False)
+        with pytest.warns(HealthRepairWarning):
+            x = op.solve(b_small, health="fallback")
+    np.testing.assert_allclose(x, x_ref, rtol=1e-8, atol=1e-10)
+    assert op.stats.health_events == 1
+    assert op.stats.last_health_event == "output:reference"
+
+
+def test_poisoned_payload_repair_escalates_to_reference(L_small, b_small):
+    # the device pipeline is poisoned, so refinement corrections are NaN
+    # too: "repair" must escalate to the host reference, not loop forever
+    x_ref = _oracle(L_small, b_small)
+    with faults.nan_schedule_payload():
+        op = TriangularOperator.from_csr(L_small, cache=False)
+        with pytest.warns(HealthRepairWarning):
+            x = op.solve(b_small, health="repair")
+    np.testing.assert_allclose(x, x_ref, rtol=1e-8, atol=1e-10)
+    assert op.stats.last_health_event == "output:reference"
+
+
+def test_wrong_values_caught_only_by_strict(L_small, b_small):
+    """The silent-wrong-answer fault class: finite output, wrong numbers.
+    Finiteness checks pass; only the strict residual check catches it."""
+    x_ref = _oracle(L_small, b_small)
+    with faults.wrong_schedule_values(3.0):
+        op = TriangularOperator.from_csr(L_small, cache=False)
+        x = op.solve(b_small, max_refine=0)             # default: no check
+        assert np.isfinite(x).all()
+        assert np.abs(x - x_ref).max() > 1e-3           # silently wrong
+        with pytest.raises(NumericalHealthError) as ei:
+            op.solve(b_small, max_refine=0, health="strict")
+    assert ei.value.stage == "residual"
+    assert "residual" in str(ei.value)
+
+
+def test_strict_passes_on_healthy_solves(L_small, b_small):
+    op = TriangularOperator.from_csr(L_small, cache=False)
+    x = op.solve(b_small, health="strict")
+    np.testing.assert_allclose(x, _oracle(L_small, b_small), rtol=1e-8,
+                               atol=1e-10)
+    assert op.stats.health_events == 0
+
+
+# -- engine fallback chains ---------------------------------------------------
+
+
+def test_engine_compile_failure_downgrades_to_scan(L_small, b_small):
+    x_ref = _oracle(L_small, b_small)
+    with faults.fail_engine_compile("pallas-interpret") as count:
+        op = TriangularOperator.from_csr(L_small, cache=False,
+                                         engine="pallas-interpret")
+        with pytest.warns(EngineFallbackWarning, match="downgraded"):
+            x = op.solve(b_small)
+    assert count["failed"] == 1                     # the fault really fired
+    np.testing.assert_allclose(x, x_ref, rtol=1e-8, atol=1e-10)
+    assert op.stats.fallbacks == 1
+    assert op.stats.last_fallback == "pallas-interpret->scan"
+
+
+def test_downgrade_warns_once_but_counts_every_solve(L_small, b_small):
+    import warnings as _w
+    with faults.fail_engine_compile("pallas-interpret"):
+        op = TriangularOperator.from_csr(L_small, cache=False,
+                                         engine="pallas-interpret")
+        with pytest.warns(EngineFallbackWarning):
+            op.solve(b_small)
+        with _w.catch_warnings(record=True) as rec:
+            _w.simplefilter("always")
+            op.solve(b_small)
+        assert not [w for w in rec
+                    if issubclass(w.category, EngineFallbackWarning)]
+    assert op.stats.fallbacks == 2                  # every event counted
+
+
+def test_engine_unavailable_downgrades(L_small, b_small):
+    with faults.engine_unavailable("pallas-interpret"):
+        op = TriangularOperator.from_csr(L_small, cache=False,
+                                         engine="pallas-interpret")
+        with pytest.warns(EngineFallbackWarning, match="unavailable"):
+            x = op.solve(b_small)
+    np.testing.assert_allclose(x, _oracle(L_small, b_small), rtol=1e-8,
+                               atol=1e-10)
+    assert op.stats.last_fallback == "pallas-interpret->scan"
+
+
+def test_dtype_capability_rejection_downgrades(L_small, b_small):
+    """A float64 schedule on the float32-only pallas kernel: the eager
+    capability check raises inside compile and the chain serves via scan."""
+    with pytest.warns(EngineFallbackWarning):
+        op = TriangularOperator.from_csr(L_small, cache=False,
+                                         engine="pallas-interpret",
+                                         dtype=np.float64)
+        x = op.solve(b_small)
+    np.testing.assert_allclose(x, _oracle(L_small, b_small), rtol=1e-5,
+                               atol=1e-5)
+    assert op.stats.last_fallback == "pallas-interpret->scan"
+
+
+def test_mesh_loss_downgrades_sharded_to_scan(L_small, b_small):
+    with faults.lose_mesh():
+        op = TriangularOperator.from_csr(L_small, cache=False,
+                                         engine="sharded")
+        with pytest.warns(EngineFallbackWarning, match="mesh"):
+            x = op.solve(b_small)
+    np.testing.assert_allclose(x, _oracle(L_small, b_small), rtol=1e-8,
+                               atol=1e-10)
+    assert op.stats.last_fallback == "sharded->scan"
+
+
+def test_exhausted_chain_raises_named_attempts(L_small, b_small):
+    with faults.fail_engine_compile("scan"):
+        op = TriangularOperator.from_csr(L_small, cache=False)
+        with pytest.raises(EngineFallbackError) as ei:
+            op.solve(b_small)
+    assert [name for name, _ in ei.value.attempts] == ["scan"]
+    assert "injected compile failure" in str(ei.value)
+
+
+def test_exhausted_chain_with_fallback_policy_serves_reference(
+        L_small, b_small):
+    with faults.fail_engine_compile("scan"):
+        op = TriangularOperator.from_csr(L_small, cache=False)
+        with pytest.warns(HealthRepairWarning, match="host reference"):
+            x = op.solve(b_small, health="fallback")
+    np.testing.assert_allclose(x, _oracle(L_small, b_small), rtol=1e-8,
+                               atol=1e-10)
+    assert op.stats.last_health_event == "engine:reference"
+
+
+# -- hardened disk cache ------------------------------------------------------
+
+
+def _fake_payload(tag: int) -> dict:
+    return {"version": CACHE_VERSION, "tag": tag,
+            "blob": np.full(4096, tag, dtype=np.float64)}
+
+
+def test_concurrent_writers_never_tear_the_artifact(tmp_path):
+    """N writer threads race on ONE cache key while a reader loads in a
+    loop: every successful load must be a complete payload from some
+    writer — never a torn/interleaved pickle — and no tmp files remain."""
+    key = "deadbeef" * 4 + "-" + "0" * 16
+    stop = threading.Event()
+    bad = []
+
+    def writer(tag):
+        for _ in range(40):
+            TriangularOperator._disk_store(key, _fake_payload(tag), tmp_path)
+
+    def reader():
+        while not stop.is_set():
+            payload = TriangularOperator._disk_load(key, tmp_path)
+            if payload is None:
+                continue
+            tag = payload["tag"]
+            if not (payload["blob"] == tag).all():
+                bad.append(payload)     # pragma: no cover - the failure case
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
+    rdr = threading.Thread(target=reader)
+    rdr.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rdr.join()
+    assert not bad
+    assert not list(tmp_path.glob("*.tmp"))         # all tmps published
+    final = TriangularOperator._disk_load(key, tmp_path)
+    assert final is not None and (final["blob"] == final["tag"]).all()
+
+
+@pytest.mark.parametrize("mode", ["garbage", "truncate", "stale"])
+def test_corrupt_entries_quarantined_not_deleted(L_small, b_small, tmp_path,
+                                                mode):
+    kw = dict(tune="no_rewriting", cache_dir=tmp_path)
+    TriangularOperator.from_csr(L_small, **kw)
+    corrupted = faults.corrupt_cache_entries(tmp_path, mode=mode)
+    assert len(corrupted) == 1
+    TriangularOperator.clear_memory_cache()
+    with pytest.warns(CacheQuarantineWarning):
+        op = TriangularOperator.from_csr(L_small, **kw)
+    assert op.stats.cache_source == "built"         # rebuilt, no raise
+    # the bad bytes are preserved for diagnosis in the .bad/ sibling
+    quarantined = list((tmp_path / ".bad").glob("op-*.pkl"))
+    assert len(quarantined) == 1
+    # and the rebuilt artifact is valid: a clean process disk-hits it
+    TriangularOperator.clear_memory_cache()
+    op2 = TriangularOperator.from_csr(L_small, **kw)
+    assert op2.stats.cache_source == "disk"
+    np.testing.assert_allclose(op2.solve(b_small),
+                               _oracle(L_small, b_small), rtol=1e-8,
+                               atol=1e-10)
+
+
+# -- declarative retry (RetryPolicy) ------------------------------------------
+
+
+def test_retry_policy_parameter_ladder():
+    p = RetryPolicy(max_attempts=3, scale0=0.5, growth=2.0)
+    assert list(p.params()) == [0.0, 0.5, 1.0, 2.0]
+    assert list(RetryPolicy(max_attempts=0).params()) == [0.0]
+
+
+def test_retry_policy_run_semantics():
+    calls = []
+
+    def attempt(a):
+        calls.append(a)
+        if len(calls) < 3:
+            raise KeyError("flaky")
+        return a * 10
+
+    result, param, attempts = RetryPolicy(
+        max_attempts=5, scale0=1.0).run(attempt, retry_on=(KeyError,))
+    assert (result, param, attempts) == (20.0, 2.0, 3)
+    # exhaustion re-raises the last retry_on error
+    with pytest.raises(KeyError):
+        RetryPolicy(max_attempts=1).run(
+            lambda a: (_ for _ in ()).throw(KeyError("always")),
+            retry_on=(KeyError,))
+    # foreign exception types propagate immediately (no retry burned)
+    seen = []
+
+    def boom(a):
+        seen.append(a)
+        raise ValueError("not retryable")
+
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=5).run(boom, retry_on=(KeyError,))
+    assert len(seen) == 1
+
+
+def test_factorization_breakdown_uses_retry_ladder():
+    import scipy.sparse as sp
+    from repro.precond.factorize import (FactorizationBreakdown, ic0, ilu0)
+    from repro.sparse.csr import CSR
+    n = 12
+    M = sp.diags(np.linspace(-1.0, 1.0, n)).tocsr()     # indefinite diag
+    A = CSR(indptr=M.indptr, indices=M.indices, data=M.data, shape=M.shape)
+    with pytest.raises(FactorizationBreakdown):
+        ic0(A, check_symmetric=False, max_shift_attempts=0)
+    f = ic0(A, check_symmetric=False)
+    assert f.attempts > 1 and f.shift > 0.0
+    # ilu0 breaks down on ~zero pivots: an explicit zero diagonal entry
+    Z = CSR(indptr=np.array([0, 2, 4]), indices=np.array([0, 1, 0, 1]),
+            data=np.array([0.0, 1.0, 1.0, 1.0]), shape=(2, 2))
+    with pytest.raises(FactorizationBreakdown):
+        ilu0(Z, max_shift_attempts=0)
+    f2 = ilu0(Z)
+    assert f2.attempts > 1 and f2.shift > 0.0
+
+
+# -- hardened portfolio measurement -------------------------------------------
+
+
+def test_measure_failure_does_not_kill_tuning(L_small):
+    from repro.core.portfolio import StrategyPortfolio
+    tuner = StrategyPortfolio(measure_top_k=2, measure_iters=1)
+    with faults.fail_engine_compile("scan"):
+        rep = tuner.tune(L_small)
+    measured = [c for c in rep.candidates if c.measured_us is not None]
+    assert len(measured) == 2
+    assert all(c.measured_us == float("inf") for c in measured)
+    assert all("measure failed" in (c.measure_note or "") for c in measured)
+    assert rep.best.sched is not None               # tuning still produced
+
+
+def test_measure_timeout_records_note(L_small):
+    from repro.core.portfolio import StrategyPortfolio
+    tuner = StrategyPortfolio(measure_top_k=1, measure_iters=5,
+                              measure_timeout_s=0.0)
+    rep = tuner.tune(L_small)
+    c = rep.candidates[0]
+    assert c.measured_us is not None and np.isfinite(c.measured_us)
+    assert "timeout" in c.measure_note
+
+
+# -- krylov breakdown status --------------------------------------------------
+
+
+def test_krylov_poisoned_preconditioner_reports_breakdown():
+    import jax.numpy as jnp
+    from repro.iterative.krylov import (STATUS_BREAKDOWN, STATUS_CONVERGED,
+                                        bicgstab, cg, gmres, status_labels)
+    from repro.sparse import generators as g
+    A = g.poisson2d_spd(8, 8)
+    b = np.random.default_rng(0).standard_normal(A.n_rows).astype(np.float32)
+    for drv in (cg, bicgstab, gmres):
+        res = drv(A, b, tol=1e-6)
+        assert int(res.status) == STATUS_CONVERGED, drv.__name__
+        res = drv(A, b, preconditioner=lambda r: r * jnp.nan, maxiter=15)
+        assert int(res.status) == STATUS_BREAKDOWN, drv.__name__
+        assert not bool(res.converged), drv.__name__
+        # frozen at the last healthy iterate — never a poisoned x
+        assert np.isfinite(np.asarray(res.x)).all(), drv.__name__
+        assert status_labels(res.status) == "breakdown"
+
+
+def test_krylov_batched_breakdown_is_per_column():
+    from repro.iterative.krylov import (STATUS_BREAKDOWN, STATUS_CONVERGED,
+                                        bicgstab, cg, gmres)
+    from repro.sparse import generators as g
+    A = g.poisson2d_spd(8, 8)
+    n = A.n_rows
+    good = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    B = np.stack([good, np.full(n, np.nan, np.float32)], axis=1)
+    for drv in (cg, bicgstab, gmres):
+        res = drv(A, B, tol=1e-6, maxiter=200)
+        status = np.asarray(res.status)
+        assert status[0] == STATUS_CONVERGED, drv.__name__
+        assert status[1] == STATUS_BREAKDOWN, drv.__name__
+        assert np.isfinite(np.asarray(res.x)).all(), drv.__name__
+
+
+# -- facade pass-through ------------------------------------------------------
+
+
+def test_sptrsv_health_passthrough(L_small, b_small):
+    bad = np.array(b_small)
+    bad[0] = np.nan
+    with pytest.raises(NumericalHealthError):
+        sptrsv(L_small, bad, cache=False)
+    x_ref = _oracle(L_small, b_small)
+    with faults.nan_schedule_payload():
+        with pytest.warns(HealthRepairWarning):
+            x = sptrsv(L_small, b_small, cache=False, health="fallback")
+    np.testing.assert_allclose(x, x_ref, rtol=1e-8, atol=1e-10)
+
+
+def test_preconditioner_apply_health_passthrough():
+    from repro.precond import Preconditioner
+    from repro.sparse import generators as g
+    A = g.poisson2d_spd(6, 6)
+    P = Preconditioner.ic0(A, tune="no_rewriting", cache=False)
+    bad = np.full(A.n_rows, np.nan)
+    with pytest.raises(NumericalHealthError):
+        P.apply(bad)
+    r = np.ones(A.n_rows)
+    z = P.apply(r, health="strict", max_refine=3)
+    assert np.isfinite(z).all()
+
+
+def test_happy_path_health_overhead_is_negligible(L_small, b_small):
+    """Acceptance: health checks cost <= 5% on the happy path.  Timed over
+    enough reps to dodge scheduler noise; asserted with slack (2x) so CI
+    jitter cannot flake the suite — a real regression (e.g. an extra host
+    solve per call) is orders of magnitude above this bar."""
+    import time
+    op = TriangularOperator.from_csr(L_small, cache=False)
+    op.solve(b_small)                   # compile outside the timers
+
+    def best_of(health, reps=5, inner=20):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                op.solve(b_small, health=health)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    off = best_of("off")
+    on = best_of("on")
+    assert on <= off * 2.0, (on, off)
