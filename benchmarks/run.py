@@ -13,6 +13,8 @@ Sections:
   operator        — auto-tuner vs fixed strategies (BENCH_operator.json)
   iterative       — end-to-end IC(0)-PCG, tuned vs no_rewriting
                     (BENCH_iterative.json)
+  refactor        — value-update fast path vs full re-tuned rebuild per
+                    time step (BENCH_refactor.json)
   distributed     — sharded-engine scaling curve + steps-vs-all_gathers
                     table (BENCH_distributed.json; full mode runs in a
                     subprocess with 8 forced host devices, smoke runs
@@ -97,6 +99,7 @@ def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
     import benchmarks.iterative_bench as ib
     import benchmarks.level_profiles as lp
     import benchmarks.operator_bench as ob
+    import benchmarks.refactor_bench as rb
     import benchmarks.solver_bench as sb
     import benchmarks.table1 as t1
     from repro.sparse import generators
@@ -118,11 +121,13 @@ def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
            measure_top_k=0)
     it_rec = ib.run(out_path=iterative_out, scales=(0.02, 0.02), iters=1,
                     maxiter=200, measure_top_k=2)
+    refactor = rb.run(out_path=None, scales=(0.04, 0.04), steps=2, iters=1)
     rec = bench_schedule(None, scales=(0.08, 0.06), reps=2,
                          time_solve=False)
     rec["engines"] = engines
     rec["iterative"] = it_rec
     rec["distributed_smoke"] = distributed
+    rec["refactor_smoke"] = refactor
     if out_path:        # persist WITH the engine section (record == file)
         p = Path(out_path)
         p.parent.mkdir(parents=True, exist_ok=True)
@@ -171,6 +176,10 @@ def main() -> None:
     print("\n== End-to-end IC(0)-PCG: tuned vs no_rewriting ==")
     from benchmarks import iterative_bench
     iterative_bench.run(out_path="experiments/BENCH_iterative.json")
+    print("\n== Refactorization fast path: update_values vs full "
+          "rebuild per step ==")
+    from benchmarks import refactor_bench
+    refactor_bench.run(out_path="experiments/BENCH_refactor.json")
     print("\n== Sharded scaling curve + steps-vs-all_gathers "
           "(8 forced host devices, subprocess) ==")
     from benchmarks import distributed_bench

@@ -9,7 +9,8 @@ from .rewrite import EquationStore, RewriteResult
 from .strategies import (AvgLevelCost, ConstrainedAvgLevelCost,
                          CriticalPathRewrite, ManualEveryK, NoRewrite,
                          strategy_label)
-from .transform import TransformMetrics, TransformedSystem, transform
+from .transform import (ReplayPlan, TransformMetrics, TransformedSystem,
+                        replay_transform, transform)
 from .codegen import generate_c_source, generated_code_bytes
 from .portfolio import (PairReport, PortfolioCandidate, PortfolioReport,
                         StrategyPortfolio, default_candidates, make_strategy)
@@ -17,18 +18,21 @@ from .portfolio import CostModel as TuningCostModel
 from .resilience import (CacheQuarantineWarning, EngineFallbackError,
                          EngineFallbackWarning, HealthPolicy,
                          HealthRepairWarning, NumericalHealthError,
-                         ResilienceError, ResilienceWarning, RetryPolicy,
-                         SolveGuard, resolve_health_policy)
+                         PatternMismatchError, ResilienceError,
+                         ResilienceWarning, RetryPolicy, SolveGuard,
+                         resolve_health_policy)
 
 __all__ = [
     "CostModel", "GraphView", "EquationStore", "RewriteResult",
     "NoRewrite", "AvgLevelCost", "ManualEveryK", "ConstrainedAvgLevelCost",
     "CriticalPathRewrite", "strategy_label",
     "TransformMetrics", "TransformedSystem", "transform",
+    "ReplayPlan", "replay_transform",
     "generate_c_source", "generated_code_bytes",
     "StrategyPortfolio", "PortfolioCandidate", "PortfolioReport",
     "PairReport", "TuningCostModel", "default_candidates", "make_strategy",
     "ResilienceError", "NumericalHealthError", "EngineFallbackError",
+    "PatternMismatchError",
     "ResilienceWarning", "EngineFallbackWarning", "HealthRepairWarning",
     "CacheQuarantineWarning", "HealthPolicy", "SolveGuard", "RetryPolicy",
     "resolve_health_policy",

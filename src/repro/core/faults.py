@@ -32,7 +32,8 @@ import numpy as np
 
 __all__ = [
     "poison_schedule", "scale_schedule", "nan_schedule_payload",
-    "wrong_schedule_values", "corrupt_cache_entries", "fail_engine_compile",
+    "wrong_schedule_values", "corrupt_values_payload", "pattern_drift",
+    "corrupt_cache_entries", "fail_engine_compile",
     "engine_unavailable", "lose_mesh",
 ]
 
@@ -102,6 +103,51 @@ def wrong_schedule_values(factor: float = 2.0):
     (scale_schedule) — the solve succeeds, finiteness checks pass, and
     only a residual check against the original matrix can detect it."""
     return _schedule_fault(lambda s: scale_schedule(s, factor))
+
+
+# -- refactorization faults ---------------------------------------------------
+
+
+@contextlib.contextmanager
+def corrupt_values_payload(value: float = np.nan):
+    """Every schedule value-repack inside the context — the seam the
+    `update_values` / `Preconditioner.refactor` fast path routes its
+    numeric payload through — returns a `value`-poisoned schedule, so
+    solves through the updated operator emit non-finite output unless a
+    health guard catches them.  Yields {"calls": n} for asserting the
+    fault actually fired."""
+    from ..solver import schedule as _sched
+    real = _sched.repack_schedule_values
+    count = {"calls": 0}
+
+    def faulty(sched, new_data, new_diag):
+        count["calls"] += 1
+        return poison_schedule(real(sched, new_data, new_diag), value)
+
+    with _patched(_sched, "repack_schedule_values", faulty):
+        yield count
+
+
+def pattern_drift(L):
+    """A same-shape, same-nnz copy of a CSR with ONE strict-lower entry's
+    column silently shifted left — the pattern drift that value-level
+    checks cannot see (finiteness, norms and fingerprint length all
+    match).  update_values / refactor must reject it with a typed
+    PatternMismatchError, never produce a finite wrong answer."""
+    from ..sparse.csr import CSR
+    indices = L.indices.copy()
+    rows = np.repeat(np.arange(L.n_rows), np.diff(L.indptr))
+    for p in range(L.nnz):
+        c, r = int(indices[p]), int(rows[p])
+        if not 0 < c < r:               # need a shiftable strict-lower entry
+            continue
+        if p > 0 and rows[p - 1] == r and indices[p - 1] == c - 1:
+            continue                    # (r, c-1) occupied: stay sorted/unique
+        indices[p] = c - 1
+        return CSR(indptr=L.indptr, indices=indices, data=L.data.copy(),
+                   shape=L.shape)
+    raise ValueError("pattern_drift: no shiftable strict-lower entry "
+                     "(matrix too small/diagonal)")
 
 
 # -- cache faults -------------------------------------------------------------

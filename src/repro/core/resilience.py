@@ -25,8 +25,13 @@ Error taxonomy
     ├── NumericalHealthError     non-finite / inaccurate solve data; carries
     │                            `.stage` ("input"|"output"|"residual"),
     │                            `.where`, and `.fallbacks` attempted
-    └── EngineFallbackError      every engine in a fallback chain failed;
-                                 carries `.attempts` [(engine, reason), ...]
+    ├── EngineFallbackError      every engine in a fallback chain failed;
+    │                            carries `.attempts` [(engine, reason), ...]
+    └── PatternMismatchError     a value-only refactorization (`update_values`
+                                 / `Preconditioner.refactor`) was handed a
+                                 matrix whose sparsity pattern differs from
+                                 the frozen one; carries `.where` and
+                                 `.detail` (docs/refactorization.md)
 
     ResilienceWarning(UserWarning)
     ├── EngineFallbackWarning    an engine was downgraded (never silent)
@@ -52,6 +57,7 @@ import numpy as np
 
 __all__ = [
     "ResilienceError", "NumericalHealthError", "EngineFallbackError",
+    "PatternMismatchError",
     "ResilienceWarning", "EngineFallbackWarning", "HealthRepairWarning",
     "CacheQuarantineWarning",
     "HealthPolicy", "SolveGuard", "RetryPolicy", "resolve_health_policy",
@@ -98,6 +104,31 @@ class EngineFallbackError(ResilienceError):
         detail = "; ".join(f"{name}: {reason}" for name, reason in attempts)
         super().__init__(
             f"{where}: every engine in the fallback chain failed — {detail}")
+
+
+class PatternMismatchError(ResilienceError):
+    """A value-only refactorization received a different sparsity pattern.
+
+    The pattern-frozen fast paths (`TriangularOperator.update_values`,
+    `Preconditioner.refactor`, `precond.factorize.refactor`) reuse level
+    analysis, the graph transformation, the tuner pick, and factorization
+    index plans verbatim — all of which are functions of the sparsity
+    pattern alone.  A matrix whose pattern differs (shape, indptr, or
+    indices) would silently produce a *finite but wrong* answer if packed
+    into the frozen structures, so the mismatch is a typed, eager error:
+    rebuild with `from_csr` / `ic0` / `ilu0` instead.
+
+    where:  the component that detected the mismatch.
+    detail: what differed — "shape", "indptr", "indices", "nnz", or
+            "transformed-pattern drift" (an exact cancellation changed the
+            rewritten system's fill during replay).
+    """
+
+    def __init__(self, message: str, *, where: str = "", detail: str = ""):
+        self.where = where
+        self.detail = detail
+        tail = f" [{detail}]" if detail else ""
+        super().__init__(f"{where + ': ' if where else ''}{message}{tail}")
 
 
 class ResilienceWarning(UserWarning):

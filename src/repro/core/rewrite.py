@@ -95,6 +95,11 @@ class EquationStore:
         self.total_subs = 0
         self.max_rewrite_distance = 0
         self.max_abs_coef_seen = float(np.abs(L.data).max()) if L.nnz else 0.0
+        # ordered (row, target) commit log — the pattern-frozen replay plan:
+        # re-running exactly these commits against a matrix with the same
+        # pattern (new values) reproduces the transformation numerically
+        # without consulting any strategy (core.transform.replay_transform)
+        self.commit_log: list[tuple[int, int]] = []
 
     # -- row access ----------------------------------------------------------
     def deps(self, i: int) -> dict[int, float]:
@@ -189,6 +194,7 @@ class EquationStore:
         self._commit_version[i] = self._commit_version.get(i, 0) + 1
         self.level_of[i] = target
         self.rows_rewritten.add(i)
+        self.commit_log.append((int(i), int(target)))
         self.total_subs += res.n_subs
         self.max_rewrite_distance = max(self.max_rewrite_distance, dist)
         self.max_abs_coef_seen = max(self.max_abs_coef_seen, res.max_abs_coef)

@@ -34,10 +34,12 @@ import numpy as np
 from ..sparse.csr import CSR
 from ..sparse.levels import LevelSets, build_levels
 from .graph import GraphView
+from .resilience import PatternMismatchError
 from .rewrite import EquationStore
 from .strategies import Strategy, StrategyStats, strategy_label
 
-__all__ = ["TransformedSystem", "transform", "TransformMetrics"]
+__all__ = ["TransformedSystem", "transform", "TransformMetrics",
+           "ReplayPlan", "replay_transform"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +83,21 @@ class TransformMetrics:
 
 
 @dataclasses.dataclass(frozen=True)
+class ReplayPlan:
+    """Frozen transformation decisions, for pattern-frozen refactorization.
+
+    A strategy's decisions — which rows move and to which target level, in
+    which order — depend on the sparsity pattern (and, for the constrained
+    strategy, on coefficient magnitudes, which is why the plan records the
+    *outcome*, not the policy).  Replaying exactly these commits against a
+    same-pattern matrix with new values re-runs only the numeric
+    elimination algebra: no level analysis, no strategy, no tuner.
+    """
+    level_of0: np.ndarray               # pre-strategy level assignment
+    commits: tuple[tuple[int, int], ...]  # ordered (row, target) commits
+
+
+@dataclasses.dataclass(frozen=True)
 class TransformedSystem:
     """(A', T, src, d) + level schedule for the transformed solve."""
     A: CSR                      # strict-lower dependency coefficients
@@ -91,6 +108,7 @@ class TransformedSystem:
     level_of_recomputed: np.ndarray
     metrics: TransformMetrics
     B: CSR | None = None        # materialized B' (optional)
+    plan: ReplayPlan | None = None  # replay plan (replay_transform)
 
     def levelsets(self, assigned: bool = False) -> LevelSets:
         lof = self.level_of_assigned if assigned else self.level_of_recomputed
@@ -179,13 +197,62 @@ def transform(L: CSR, strategy: Strategy, validate: bool = True,
         nnz_A=A.nnz, nnz_T=T.nnz,
     )
     B = store.materialize_b(T, src) if materialize_b else None
+    plan = ReplayPlan(level_of0=view.levels.level_of.copy(),
+                      commits=tuple(store.commit_log))
     ts = TransformedSystem(A=A, T=T, src=src, diag=d,
                            level_of_assigned=assigned,
                            level_of_recomputed=recomputed, metrics=metrics,
-                           B=B)
+                           B=B, plan=plan)
     if validate:
         _validate_equivalence(L, ts, rng_seed)
     return ts
+
+
+def replay_transform(L_new: CSR, ts: TransformedSystem,
+                     where: str = "replay_transform") -> TransformedSystem:
+    """Re-run a frozen transformation against new values on the same pattern.
+
+    Replays `ts.plan` (the committed (row, target) sequence) through a fresh
+    EquationStore on `L_new` — pure numeric elimination over decisions that
+    are already made, so level analysis (`GraphView`/`build_levels`), the
+    strategy, and validation solves are all skipped.  The exported A'/T/src
+    patterns are verified against the frozen ones: an exact floating-point
+    cancellation in the new values can change the rewritten system's fill,
+    and packing drifted values into the frozen schedule would be a finite
+    but wrong answer — so drift raises `PatternMismatchError` instead.
+
+    The caller is responsible for checking that `L_new`'s pattern matches
+    the matrix `ts` was built from (`sparse.csr.same_pattern`); this
+    function only has the transformed system to compare against.
+    """
+    plan = ts.plan
+    if plan is None:
+        raise ValueError(
+            f"{where}: TransformedSystem carries no ReplayPlan (built before "
+            "the refactorization fast path existed) — rebuild with "
+            "transform()/from_csr()")
+    if L_new.n_rows != ts.diag.shape[0]:
+        raise PatternMismatchError(
+            f"matrix has {L_new.n_rows} rows, frozen system has "
+            f"{ts.diag.shape[0]}", where=where, detail="shape")
+    store = EquationStore(L_new, plan.level_of0)
+    for i, target in plan.commits:
+        res = store.rewrite_to_level(i, target)
+        store.commit(i, target, res)
+    A, T, src, d = store.export()
+    from ..sparse.csr import same_pattern
+    if not (same_pattern(A, ts.A) and same_pattern(T, ts.T)
+            and np.array_equal(src, ts.src)):
+        raise PatternMismatchError(
+            "replayed transformation produced different fill than the frozen "
+            "system (an exact cancellation changed the rewritten pattern) — "
+            "rebuild with transform()/from_csr()",
+            where=where, detail="transformed-pattern drift")
+    metrics = dataclasses.replace(ts.metrics,
+                                  max_abs_coef=store.max_abs_coef_seen)
+    B = store.materialize_b(T, src) if ts.B is not None else None
+    return dataclasses.replace(ts, A=A, T=T, src=src, diag=d,
+                               metrics=metrics, B=B)
 
 
 def _strict_lower_csr(L: CSR) -> CSR:

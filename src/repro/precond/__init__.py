@@ -14,9 +14,10 @@ manage their own operators.  The consumer side lives in `repro.iterative`
 (jit-native Krylov drivers); docs/iterative.md walks the full pipeline.
 """
 from .api import IdentityPreconditioner, Preconditioner
-from .factorize import FactorResult, FactorizationBreakdown, ic0, ilu0
+from .factorize import (FactorResult, FactorizationBreakdown, ic0, ilu0,
+                        refactor)
 
 __all__ = [
     "Preconditioner", "IdentityPreconditioner",
-    "FactorResult", "FactorizationBreakdown", "ic0", "ilu0",
+    "FactorResult", "FactorizationBreakdown", "ic0", "ilu0", "refactor",
 ]

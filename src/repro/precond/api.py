@@ -286,6 +286,30 @@ class Preconditioner:
     def clear_pair_decisions(cls) -> None:
         cls._pair_decisions.clear()
 
+    def refactor(self, new_A: CSR, **factor_kwargs) -> "Preconditioner":
+        """Numeric-only re-preconditioning for a new A on the SAME pattern.
+
+        The refactorization fast path for time-stepping / Newton outer
+        loops (docs/refactorization.md): re-runs only the ic0/ilu0 value
+        sweep over the frozen pattern plan (`factorize.refactor`), then
+        re-binds both triangular operators in place through
+        `TriangularOperator.update_values` — pair tuning, level analysis,
+        transformations, schedules and compiled engine executables are all
+        reused.  Mutates this preconditioner and returns self.
+
+        A pattern-changing A raises PatternMismatchError (build a fresh
+        Preconditioner instead); `factor_kwargs` forwards shift0 /
+        max_shift_attempts / breakdown_rtol to `factorize.refactor`.
+        """
+        fac = factorize.refactor(self.factors, new_A, **factor_kwargs)
+        self.forward.update_values(fac.L)
+        self.backward.update_values(fac.L if fac.kind == "ic0" else fac.U)
+        self.factors = fac
+        # composed device pipelines close over the old payloads' staged
+        # schedules — drop them so the next device_apply recomposes
+        self._device_fns.clear()
+        return self
+
     # -- application ----------------------------------------------------------
     @property
     def n(self) -> int:

@@ -55,11 +55,12 @@ import dataclasses
 
 import numpy as np
 
-from ..core.resilience import RetryPolicy
-from ..sparse.csr import CSR, from_coo, tril
+from ..core.resilience import PatternMismatchError, RetryPolicy
+from ..sparse.csr import CSR, from_coo, same_pattern, tril
 from ..sparse.levels import build_levels
 
-__all__ = ["FactorResult", "FactorizationBreakdown", "ic0", "ilu0"]
+__all__ = ["FactorResult", "FactorizationBreakdown", "ic0", "ilu0",
+           "refactor"]
 
 
 class FactorizationBreakdown(RuntimeError):
@@ -80,6 +81,11 @@ class FactorResult:
     shift:    the diagonal shift alpha that made the factorization succeed
               (0.0 when no breakdown occurred).
     attempts: number of factorization sweeps run (1 = no breakdown).
+    plan:     the pattern-only preprocessing (_IC0Plan / _ILU0Plan) the
+              numeric sweep ran over.  Kept so `refactor` can re-run the
+              sweep for new values on the same pattern without re-deriving
+              the index arrays (the refactorization fast path,
+              docs/refactorization.md).
     """
 
     kind: str
@@ -87,6 +93,8 @@ class FactorResult:
     U: CSR | None
     shift: float
     attempts: int
+    plan: object | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n(self) -> int:
@@ -325,7 +333,7 @@ def ic0(A: CSR, *, shift0: float = 1e-3, max_shift_attempts: int = 20,
     L = CSR(indptr=low.indptr, indices=low.indices, data=data,
             shape=low.shape)
     return FactorResult(kind="ic0", L=L, U=None, shift=alpha,
-                        attempts=attempts)
+                        attempts=attempts, plan=plan)
 
 
 # -- ILU(0) -------------------------------------------------------------------
@@ -436,15 +444,92 @@ def ilu0(A: CSR, *, shift0: float = 1e-3, max_shift_attempts: int = 20,
         lambda a: _ilu0_sweep(plan, _shifted(A.data, plan.dpos, a, base),
                               breakdown_rtol),
         retry_on=(FactorizationBreakdown,))
-    n = A.n_rows
-    rows = np.repeat(np.arange(n), A.row_nnz())
-    low_mask = A.indices < rows
-    up_mask = A.indices >= rows
-    L = from_coo(np.concatenate([rows[low_mask], np.arange(n)]),
-                 np.concatenate([A.indices[low_mask], np.arange(n)]),
-                 np.concatenate([data[low_mask], np.ones(n)]),
-                 A.shape, sum_duplicates=False)
-    U = from_coo(rows[up_mask], A.indices[up_mask], data[up_mask], A.shape,
-                 sum_duplicates=False)
+    L, U = _ilu0_split(A, data)
     return FactorResult(kind="ilu0", L=L, U=U, shift=alpha,
-                        attempts=attempts)
+                        attempts=attempts, plan=plan)
+
+
+def _ilu0_split(pat: CSR, data: np.ndarray) -> tuple[CSR, CSR]:
+    """Split in-place-factored values (strict-lower = L, diag+upper = U)
+    into the two triangular factor CSRs."""
+    n = pat.n_rows
+    rows = np.repeat(np.arange(n), pat.row_nnz())
+    low_mask = pat.indices < rows
+    up_mask = pat.indices >= rows
+    L = from_coo(np.concatenate([rows[low_mask], np.arange(n)]),
+                 np.concatenate([pat.indices[low_mask], np.arange(n)]),
+                 np.concatenate([data[low_mask], np.ones(n)]),
+                 pat.shape, sum_duplicates=False)
+    U = from_coo(rows[up_mask], pat.indices[up_mask], data[up_mask],
+                 pat.shape, sum_duplicates=False)
+    return L, U
+
+
+# -- pattern-frozen refactorization -------------------------------------------
+
+
+def refactor(fac: FactorResult, A_new: CSR, *, shift0: float = 1e-3,
+             max_shift_attempts: int = 20,
+             breakdown_rtol: float | None = None) -> FactorResult:
+    """Numeric-only re-factorization of a new matrix on the SAME pattern.
+
+    Re-runs the vectorized ic0/ilu0 value sweep over the pattern plan
+    already carried by `fac` — level sets, update-pair index arrays and
+    diagonal positions are all reused untouched, so per time-step cost is
+    the numeric sweep alone.  The diagonal-shift retry ladder applies as in
+    the fresh factorization (each refactorization gets its own shift).
+
+    A_new whose pattern differs from the frozen one — for ic0 the pattern
+    of tril(A_new), for ilu0 the full pattern — raises a typed
+    PatternMismatchError: rebuild with ic0()/ilu0() instead.  A `fac`
+    without a plan (e.g. unpickled from an old artifact) raises ValueError.
+
+    breakdown_rtol: None picks the kind's fresh-factorization default
+    (1e-12 for ic0, 1e-14 for ilu0).
+
+    Values are NOT re-validated for symmetry (ic0's SPD check): the
+    pattern is frozen and per-step inputs are trusted — pass A_new through
+    `ic0(A_new)` if it needs the full validation.
+    """
+    plan = fac.plan
+    if plan is None:
+        raise ValueError(
+            f"FactorResult(kind={fac.kind!r}) carries no pattern plan "
+            "(stale artifact?) — run ic0()/ilu0() on the new matrix instead")
+    where = f"refactor[{fac.kind}](n={fac.n})"
+    if fac.kind == "ic0":
+        rtol = 1e-12 if breakdown_rtol is None else breakdown_rtol
+        low = tril(A_new)
+        if not same_pattern(low, plan.low):
+            raise PatternMismatchError(
+                "tril(A_new) pattern differs from the frozen ic0 pattern; "
+                "re-run ic0()", where=where, detail="lower-triangle drift")
+        base = _shift_base(low.data[plan.dpos],
+                           float(np.abs(low.data).max(initial=0.0)))
+        data, alpha, attempts = RetryPolicy(
+            max_attempts=max_shift_attempts, scale0=shift0).run(
+            lambda a: _ic0_sweep(plan, _shifted(low.data, plan.dpos, a, base),
+                                 rtol),
+            retry_on=(FactorizationBreakdown,))
+        L = CSR(indptr=low.indptr, indices=low.indices, data=data,
+                shape=low.shape)
+        return FactorResult(kind="ic0", L=L, U=None, shift=alpha,
+                            attempts=attempts, plan=plan)
+    if fac.kind == "ilu0":
+        rtol = 1e-14 if breakdown_rtol is None else breakdown_rtol
+        if not same_pattern(A_new, plan.pat):
+            raise PatternMismatchError(
+                "A_new pattern differs from the frozen ilu0 pattern; "
+                "re-run ilu0()", where=where, detail="pattern drift")
+        base = _shift_base(A_new.data[plan.dpos],
+                           float(np.abs(A_new.data).max(initial=0.0)))
+        data, alpha, attempts = RetryPolicy(
+            max_attempts=max_shift_attempts, scale0=shift0).run(
+            lambda a: _ilu0_sweep(plan,
+                                  _shifted(A_new.data, plan.dpos, a, base),
+                                  rtol),
+            retry_on=(FactorizationBreakdown,))
+        L, U = _ilu0_split(A_new, data)
+        return FactorResult(kind="ilu0", L=L, U=U, shift=alpha,
+                            attempts=attempts, plan=plan)
+    raise ValueError(f"unknown factorization kind {fac.kind!r}")

@@ -10,7 +10,7 @@ from .engines import (Engine, ScanEngine, UnrolledEngine, PallasEngine,
                       registered_engines, available_engines, default_engine,
                       engine_capabilities)
 from .operator import (TriangularOperator, OperatorStats, matrix_fingerprint,
-                       default_cache_dir, orient_lower)
+                       value_fingerprint, default_cache_dir, orient_lower)
 from .api import sptrsv, with_unit_diagonal
 from . import distributed
 
@@ -24,7 +24,7 @@ __all__ = [
     "register_engine", "resolve_engine", "get_engine", "registered_engines",
     "available_engines", "default_engine", "engine_capabilities",
     "TriangularOperator", "OperatorStats", "matrix_fingerprint",
-    "default_cache_dir", "orient_lower",
+    "value_fingerprint", "default_cache_dir", "orient_lower",
     "sptrsv", "with_unit_diagonal",
     "distributed",
 ]

@@ -133,10 +133,12 @@ class ScanEngine(Engine):
     name = "scan"
 
     def compile(self, dsched):
-        import jax
-        from .levelset import solve_scan
+        # staged_scan_fn passes the schedule leaves as jit ARGUMENTS, so
+        # compiling a value-repacked schedule with unchanged tile shapes
+        # (update_values) reuses the cached XLA executable
+        from .levelset import staged_scan_fn
         self._require_dtype(dsched)
-        return jax.jit(lambda c: solve_scan(dsched, c))
+        return staged_scan_fn(dsched)
 
 
 class UnrolledEngine(Engine):
@@ -146,10 +148,9 @@ class UnrolledEngine(Engine):
     name = "unrolled"
 
     def compile(self, dsched):
-        import jax
-        from .levelset import solve_unrolled
+        from .levelset import staged_unrolled_fn
         self._require_dtype(dsched)
-        return jax.jit(lambda c: solve_unrolled(dsched, c))
+        return staged_unrolled_fn(dsched)
 
 
 class PallasEngine(Engine):

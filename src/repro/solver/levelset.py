@@ -25,7 +25,7 @@ import numpy as np
 from .schedule import LevelSchedule
 
 __all__ = ["DeviceSchedule", "to_device", "solve_scan", "solve_unrolled",
-           "solve"]
+           "staged_scan_fn", "staged_unrolled_fn", "solve"]
 
 # leaf order within a group (row_ids doubles as the c gather index —
 # padding lanes hit the zero slot).  Carry leaves are present only for
@@ -91,35 +91,67 @@ def _step_body(x, carry, c_pad, step_groups):
     return x, carry
 
 
-def _init_state(dsched: DeviceSchedule, c: jax.Array):
-    n = dsched.n
+def _init_state(n: int, n_carry: int, c: jax.Array):
     tail = (c.shape[1],) if c.ndim == 2 else ()
     x0 = jnp.zeros((n + 1,) + tail, dtype=c.dtype)
-    carry0 = jnp.zeros((dsched.n_carry + 2,) + tail, dtype=c.dtype)
+    carry0 = jnp.zeros((n_carry + 2,) + tail, dtype=c.dtype)
     c_pad = jnp.concatenate([c, jnp.zeros((1,) + tail, c.dtype)], axis=0)
     return x0, carry0, c_pad
 
 
-def solve_scan(dsched: DeviceSchedule, c: jax.Array) -> jax.Array:
-    """Solve given preamble vector c (= b for untransformed systems)."""
-    x0, carry0, c_pad = _init_state(dsched, c)
+# The staged implementations take the schedule leaves as a PYTREE ARGUMENT
+# (not a trace-time closure): the module-level jit wrappers below then key
+# their executable cache on leaf structure/shapes only, so a value-only
+# schedule repack (`schedule.repack_schedule_values` via
+# `TriangularOperator.update_values`) reuses the already-compiled XLA
+# executable — new coefficients ride in as arguments, nothing retraces.
+
+def _scan_impl(leaves, n: int, n_carry: int, c: jax.Array) -> jax.Array:
+    x0, carry0, c_pad = _init_state(n, n_carry, c)
 
     def body(state, step_groups):
         x, carry = _step_body(*state, c_pad, step_groups)
         return (x, carry), None
 
-    (x, _), _ = jax.lax.scan(body, (x0, carry0), dsched.leaves())
-    return x[:dsched.n]
+    (x, _), _ = jax.lax.scan(body, (x0, carry0), leaves)
+    return x[:n]
+
+
+def _unrolled_impl(leaves, n: int, n_carry: int, c: jax.Array) -> jax.Array:
+    x, carry, c_pad = _init_state(n, n_carry, c)
+    num_steps = int(leaves[0][0].shape[0]) if leaves else 0
+    for s in range(num_steps):
+        step_groups = tuple(tuple(l[s] for l in g) for g in leaves)
+        x, carry = _step_body(x, carry, c_pad, step_groups)
+    return x[:n]
+
+
+_scan_jit = jax.jit(_scan_impl, static_argnums=(1, 2))
+_unrolled_jit = jax.jit(_unrolled_impl, static_argnums=(1, 2))
+
+
+def solve_scan(dsched: DeviceSchedule, c: jax.Array) -> jax.Array:
+    """Solve given preamble vector c (= b for untransformed systems)."""
+    return _scan_impl(dsched.leaves(), dsched.n, dsched.n_carry, c)
 
 
 def solve_unrolled(dsched: DeviceSchedule, c: jax.Array) -> jax.Array:
     """Trace-time unrolled engine (use when step count is small — i.e. after
     the transformation)."""
-    x, carry, c_pad = _init_state(dsched, c)
-    for s in range(dsched.num_steps):
-        step_groups = tuple(tuple(l[s] for l in g) for g in dsched.leaves())
-        x, carry = _step_body(x, carry, c_pad, step_groups)
-    return x[:dsched.n]
+    return _unrolled_impl(dsched.leaves(), dsched.n, dsched.n_carry, c)
+
+
+def staged_scan_fn(dsched: DeviceSchedule):
+    """Serving callable for the scan engine: jit with the staged leaves as
+    arguments, so schedules sharing a tile layout share one executable."""
+    leaves, n, n_carry = dsched.leaves(), dsched.n, dsched.n_carry
+    return lambda c: _scan_jit(leaves, n, n_carry, c)
+
+
+def staged_unrolled_fn(dsched: DeviceSchedule):
+    """Serving callable for the unrolled engine (see staged_scan_fn)."""
+    leaves, n, n_carry = dsched.leaves(), dsched.n, dsched.n_carry
+    return lambda c: _unrolled_jit(leaves, n, n_carry, c)
 
 
 def solve(sched: LevelSchedule, c: np.ndarray, engine=None,

@@ -8,10 +8,21 @@ The serving-path entry point (docs/architecture.md):
 `from_csr` runs the strategy-portfolio auto-tuner (repro.core.portfolio),
 compiles the winning transform into a width-bucketed LevelSchedule, and
 caches the whole artifact — transform, schedule, ranked tuner report —
-keyed by a matrix fingerprint, in memory and persistently on disk
-(REPRO_CACHE_DIR or ~/.cache/repro-sptrsv).  Repeat construction for the
-same matrix + configuration is a cache hit: no transform, no tuning, no
-schedule compile.
+in memory and persistently on disk (REPRO_CACHE_DIR or
+~/.cache/repro-sptrsv).  Repeat construction for the same matrix +
+configuration is a cache hit: no transform, no tuning, no schedule compile.
+
+The cache key is split into a PATTERN fingerprint and a VALUE fingerprint
+(`op-{pattern}-{config}-{values}.pkl`): the pattern part keys everything
+derived from the sparsity structure alone (level analysis, the
+transformation's replay plan, the tuner pick, tile layout), the value part
+only the numeric payload.  A `from_csr` for a matrix whose pattern+config
+matches a cached artifact but whose values differ derives the new payload
+through the refactorization fast path (replay_transform +
+repack_schedule_values — `stats.cache_source == "pattern"`) instead of
+re-tuning.  `op.update_values(new_L)` is the in-place form for
+time-stepping loops; a changed pattern raises `PatternMismatchError`
+(docs/refactorization.md).
 
 All four triangular sweeps share the one lower-triangular pipeline:
 `side="lower"|"upper"` selects the stored triangle, `transpose=True` solves
@@ -81,9 +92,13 @@ import numpy as np
 from ..sparse.csr import CSR, reverse_both
 
 __all__ = ["TriangularOperator", "OperatorStats", "matrix_fingerprint",
-           "default_cache_dir", "orient_lower", "compose_sweep_fn"]
+           "value_fingerprint", "default_cache_dir", "orient_lower",
+           "compose_sweep_fn"]
 
-CACHE_VERSION = 2
+# 3: cache key split into pattern/config/value segments; payloads carry the
+# transform replay plan + schedule value plans for pattern-frozen derivation
+# (version-2 artifacts quarantine cleanly through the stale-version path)
+CACHE_VERSION = 3
 
 
 def orient_lower(A: CSR, side: str, transpose: bool) -> tuple:
@@ -167,6 +182,20 @@ def matrix_fingerprint(L: CSR, include_values: bool = True) -> str:
     return h.hexdigest()[:32]
 
 
+def value_fingerprint(L: CSR) -> str:
+    """Stable hash of the numeric payload alone (16 hex chars).
+
+    The value segment of the operator cache key: two matrices with the same
+    pattern and different values share their pattern fingerprint but never
+    their value fingerprint, so pattern-derived work (schedule layout,
+    tuner pick, replay plan) is shared while numeric payloads stay distinct.
+    """
+    h = hashlib.sha256()
+    h.update(repr((CACHE_VERSION, L.shape)).encode())
+    h.update(np.ascontiguousarray(L.data).tobytes())
+    return h.hexdigest()[:16]
+
+
 @dataclasses.dataclass
 class OperatorStats:
     """Mutable per-operator counters, updated by every solve()."""
@@ -177,8 +206,12 @@ class OperatorStats:
     total_solve_ms: float = 0.0
     last_solve_ms: float = 0.0
     last_residual: float = float("nan")
-    cache_source: str = "built"        # "built" | "memory" | "disk"
+    # "built" | "memory" | "disk" | "pattern" (payload derived from an
+    # equal-pattern artifact via the refactorization fast path)
+    cache_source: str = "built"
     tune_ms: float = 0.0
+    value_updates: int = 0             # update_values() calls served
+    last_update_ms: float = 0.0        # wall time of the last value update
     fallbacks: int = 0                 # solves served by a downgraded engine
     last_fallback: str = ""            # "requested->used"
     health_events: int = 0             # health violations detected
@@ -196,6 +229,10 @@ class TriangularOperator:
     # accumulate them forever; overflow falls back to the disk cache
     _memory_cache_max: int = 16
     _memory_cache = collections.OrderedDict()
+    # pattern segment of the key ("{pattern32}-{config16}") -> latest full
+    # key stored: lets from_csr find an equal-pattern payload to derive
+    # from without scanning the LRU
+    _pattern_index: dict = {}
 
     @classmethod
     def _memory_get(cls, key: str):
@@ -208,11 +245,13 @@ class TriangularOperator:
     def _memory_put(cls, key: str, payload: dict) -> None:
         cls._memory_cache[key] = payload
         cls._memory_cache.move_to_end(key)
+        cls._pattern_index[key.rsplit("-", 1)[0]] = key
         while len(cls._memory_cache) > cls._memory_cache_max:
             cls._memory_cache.popitem(last=False)
 
     def __init__(self, L: CSR, payload: dict, cache_source: str):
         self._L = L                 # the ORIGINAL matrix, as handed in
+        self._payload = payload     # update_values derives from + rebinds it
         self._ts = payload["ts"]    # transform of the oriented lower system
         self._sched = payload["sched"]
         self.report = payload.get("report")        # slim PortfolioReport|None
@@ -329,8 +368,12 @@ class TriangularOperator:
                         "cache": cache, "cache_dir": cache_dir,
                         "portfolio": portfolio, "cost_model": cost_model,
                         "measure_top_k": measure_top_k}
-        key = matrix_fingerprint(L) + "-" + hashlib.sha256(
-            repr(sorted(cfg.items())).encode()).hexdigest()[:16]
+        # pattern segment keys the structure-derived artifact (levels,
+        # transform plan, tuner pick, tile layout); the value segment pins
+        # the numeric payload.  Same pattern + different values is served
+        # by the refactorization fast path below.
+        pattern_key = cls._pattern_cache_key(L, cfg)
+        key = f"{pattern_key}-{value_fingerprint(L)}"
 
         def _finish(payload, source):
             op = cls(L, payload, cache_source=source)
@@ -346,6 +389,17 @@ class TriangularOperator:
             if payload is not None:
                 cls._memory_put(key, payload)
                 return _finish(payload, "disk")
+            # no exact hit: an equal-pattern artifact (any values) can be
+            # numerically re-bound without re-tuning or re-compiling
+            base = cls._memory_get(cls._pattern_index.get(pattern_key, ""))
+            if base is None:
+                base = cls._disk_load_pattern(pattern_key, cache_dir)
+            if base is not None:
+                payload = cls._try_derive_payload(base, L)
+                if payload is not None:
+                    cls._memory_put(key, payload)
+                    cls._disk_store(key, payload, cache_dir)
+                    return _finish(payload, "pattern")
 
         L_eff, reversed_ = orient_lower(L, side, bool(transpose))
         t0 = time.perf_counter()
@@ -391,6 +445,145 @@ class TriangularOperator:
         tune = kw.pop("tune")
         return TriangularOperator.from_csr(self._L, tune, **kw)
 
+    # -- pattern-frozen refactorization (docs/refactorization.md) -------------
+    @classmethod
+    def _derive_payload(cls, base: dict, L_new: CSR) -> dict:
+        """Re-bind an equal-pattern payload to new numeric values.
+
+        Reuses everything structure-derived from `base` — level analysis,
+        the winning strategy's transformation (replayed numerically via its
+        commit log), the schedule's tile layout — and re-runs only the
+        value packing.  Raises PatternMismatchError if the new values make
+        the replayed transformation's pattern drift (exact cancellation
+        creating/removing fill), ValueError if `base` predates the plans.
+        """
+        from ..core.transform import replay_transform
+        # module attribute lookup, not a from-import: fault injection
+        # (core.faults.corrupt_values_payload) patches the schedule module
+        from . import schedule as _schedule
+        cfg = base["config"]
+        chunk = cfg.get("chunk", 256)
+        max_deps = cfg.get("max_deps", 16)
+        dtype = np.dtype(cfg.get("dtype", "float32"))
+        L_eff, reversed_ = orient_lower(L_new, cfg.get("side", "lower"),
+                                        bool(cfg.get("transpose", False)))
+        ts_new = replay_transform(L_eff, base["ts"],
+                                  where="TriangularOperator.update_values")
+        sched_new = _schedule.repack_schedule_values(
+            base["sched"], ts_new.A.data, ts_new.diag)
+        # the preamble schedule (solve with the T factor) is value-bound
+        # too; repack it from the base entry when its value plan survived
+        # renumbering.  If the base never materialized it, stay lazy — the
+        # operator's _preamble_host builds it from the NEW transform on
+        # first use, so the update itself never enters build_schedule.
+        new_runtime: dict = {"compiled": {}}
+        entry = base.get("_runtime", {}).get("preamble_host")
+        if entry is not None:
+            psched = entry[0]
+            if psched is None:
+                new_runtime["preamble_host"] = entry
+            elif psched.value_plan is not None:
+                new_runtime["preamble_host"] = (
+                    _schedule.repack_schedule_values(
+                        psched, ts_new.T.data, np.ones(ts_new.T.n_rows)),
+                    entry[1], entry[2])
+            else:
+                new_runtime["preamble_host"] = _schedule.schedule_for_preamble(
+                    ts_new, chunk=chunk, max_deps=max_deps, dtype=dtype)
+        return {"version": CACHE_VERSION, "strategy": base["strategy"],
+                "ts": ts_new, "sched": sched_new,
+                "report": base.get("report"), "config": cfg,
+                "reversed": reversed_, "engine": base.get("engine", "scan"),
+                "tune_ms": base.get("tune_ms", 0.0),
+                "_runtime": new_runtime}
+
+    @classmethod
+    def _try_derive_payload(cls, base: dict, L_new: CSR) -> dict | None:
+        """_derive_payload for opportunistic from_csr use: a pattern drift
+        or a pre-plan payload means "can't fast-path", not an error — the
+        caller falls through to a full build."""
+        from ..core.resilience import PatternMismatchError
+        try:
+            return cls._derive_payload(base, L_new)
+        except (PatternMismatchError, ValueError):
+            return None
+
+    def update_values(self, new_L: CSR, *, health=None) -> "TriangularOperator":
+        """Re-bind this operator to new numeric values on the SAME pattern.
+
+        The refactorization fast path for time-stepping / Newton loops
+        where the sparsity pattern is fixed and values change every step:
+        level analysis, the graph transformation, the tuner's pick and the
+        compiled engine executables are all reused — only the numeric
+        payload is re-derived (transform replay + schedule value repack).
+
+        Mutates the operator in place and returns self.  A matrix whose
+        pattern differs from the frozen one raises PatternMismatchError
+        (rebuild with from_csr instead); non-finite values raise
+        NumericalHealthError under any health policy that checks inputs
+        (`health=` accepts the same specs as solve()).
+        """
+        from ..core.resilience import (NumericalHealthError,
+                                       PatternMismatchError,
+                                       resolve_health_policy)
+        from ..sparse.csr import same_pattern
+        where = f"TriangularOperator.update_values(n={self.n})"
+        if not same_pattern(new_L, self._L):
+            if new_L.shape != self._L.shape:
+                detail = f"shape {new_L.shape} != {self._L.shape}"
+            elif new_L.nnz != self._L.nnz:
+                detail = f"nnz {new_L.nnz} != {self._L.nnz}"
+            elif not np.array_equal(new_L.indptr, self._L.indptr):
+                detail = "row pointer drift"
+            else:
+                detail = "column index drift"
+            raise PatternMismatchError(
+                "matrix pattern differs from the frozen operator pattern; "
+                "rebuild with from_csr", where=where, detail=detail)
+        policy = resolve_health_policy(health)
+        if policy.check_inputs and not np.all(np.isfinite(new_L.data)):
+            raise NumericalHealthError(
+                f"new matrix values contain non-finite entries in {where}",
+                stage="input", where=where)
+        t0 = time.perf_counter()
+        cache = bool(self._build_kwargs.get("cache", False))
+        cache_dir = self._build_kwargs.get("cache_dir")
+        pattern_key = self._pattern_cache_key(new_L, self._config)
+        key = f"{pattern_key}-{value_fingerprint(new_L)}"
+        payload, source = None, "pattern"
+        if cache:
+            payload = self._memory_get(key)
+            if payload is not None:
+                source = "memory"
+            else:
+                payload = self._disk_load(key, cache_dir)
+                if payload is not None:
+                    source = "disk"
+                    self._memory_put(key, payload)
+        if payload is None:
+            payload = self._derive_payload(self._payload, new_L)
+            if cache:
+                self._memory_put(key, payload)
+                self._disk_store(key, payload, cache_dir)
+        self._L = new_L
+        self._payload = payload
+        self._ts = payload["ts"]
+        self._sched = payload["sched"]
+        self._reversed = bool(payload["reversed"])
+        self._runtime = payload.setdefault("_runtime", {"compiled": {}})
+        self.stats.value_updates += 1
+        self.stats.last_update_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.cache_source = source
+        return self
+
+    # -- cache plumbing -------------------------------------------------------
+    @classmethod
+    def _pattern_cache_key(cls, L: CSR, cfg: dict) -> str:
+        """Pattern+config segment of the cache key (values excluded)."""
+        return (matrix_fingerprint(L, include_values=False) + "-" +
+                hashlib.sha256(
+                    repr(sorted(cfg.items())).encode()).hexdigest()[:16])
+
     @staticmethod
     def _cache_path(key: str, cache_dir) -> Path:
         d = Path(cache_dir) if cache_dir is not None else default_cache_dir()
@@ -398,7 +591,23 @@ class TriangularOperator:
 
     @classmethod
     def _disk_load(cls, key: str, cache_dir) -> dict | None:
-        path = cls._cache_path(key, cache_dir)
+        return cls._disk_load_path(cls._cache_path(key, cache_dir))
+
+    @classmethod
+    def _disk_load_pattern(cls, pattern_key: str, cache_dir) -> dict | None:
+        """Any healthy on-disk payload whose pattern+config segment matches
+        (its values don't matter — the caller re-derives them)."""
+        d = Path(cache_dir) if cache_dir is not None else default_cache_dir()
+        if not d.exists():
+            return None
+        for path in sorted(d.glob(f"op-{pattern_key}-*.pkl")):
+            payload = cls._disk_load_path(path)
+            if payload is not None:
+                return payload
+        return None
+
+    @classmethod
+    def _disk_load_path(cls, path: Path) -> dict | None:
         if not path.exists():
             return None
         try:
@@ -459,6 +668,7 @@ class TriangularOperator:
     @classmethod
     def clear_memory_cache(cls) -> None:
         cls._memory_cache.clear()
+        cls._pattern_index.clear()
 
     # -- solving --------------------------------------------------------------
     @property

@@ -64,7 +64,8 @@ import numpy as np
 from ..sparse.csr import CSR
 from ..sparse.levels import LevelSets
 
-__all__ = ["WidthGroup", "LevelSchedule", "build_schedule", "schedule_for_csr",
+__all__ = ["WidthGroup", "LevelSchedule", "SchedValuePlan", "build_schedule",
+           "repack_schedule_values", "schedule_for_csr",
            "schedule_for_transformed", "schedule_for_preamble",
            "validate_schedule", "DEFAULT_WIDTHS"]
 
@@ -116,6 +117,37 @@ class WidthGroup:
 
 
 @dataclasses.dataclass(frozen=True)
+class SchedValuePlan:
+    """Value-scatter map recorded at materialization time (pattern-only).
+
+    The lane/tile layout is a pure function of the sparsity pattern and the
+    level assignment, but the mapping "matrix entry k -> ELL tile slot" is
+    unrecoverable from the materialized tiles (split-row partial lanes park
+    at the padding row).  Recording it lets `repack_schedule_values` refill
+    `dep_coef`/`dinv` for new values on the frozen pattern without re-running
+    lane construction, step assignment, or bucketing.
+
+    nnz:        expected length of the value vector.
+    ent_src:    gather from data order into packed-entry (lane) order;
+                None when they coincide.
+    coef_dst:   flat scatter positions into the concatenated dep-slot buffer,
+                one per packed entry, in lane-entry order.
+    lane_slot:  flat positions into the concatenated lane-scalar buffer,
+                one per lane, in (group, step)-sorted lane order.
+    lane_row:   output row per sorted lane.
+    lane_final: which sorted lanes finalize their row (partial-row lanes
+                get dinv 0, like the original fill).
+    """
+
+    nnz: int
+    ent_src: np.ndarray | None
+    coef_dst: np.ndarray
+    lane_slot: np.ndarray
+    lane_row: np.ndarray
+    lane_final: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
 class LevelSchedule:
     """Compiled ELL schedule: a tuple of WidthGroups sharing the step axis.
 
@@ -127,6 +159,9 @@ class LevelSchedule:
       D_g <= max_deps).
     compacted: whether dependency-aware step compaction ran.
     build_ms: wall-clock schedule-compile time.
+    value_plan: entry->tile scatter map for pattern-frozen value repacks
+      (`repack_schedule_values`); None only for schedules constructed by
+      hand without `build_schedule`.
     """
 
     groups: tuple
@@ -137,6 +172,7 @@ class LevelSchedule:
     max_deps: int
     compacted: bool
     build_ms: float
+    value_plan: SchedValuePlan | None = None
 
     @property
     def num_steps(self) -> int:
@@ -222,8 +258,8 @@ class _Lanes:
     """Vectorized lane streams (see module DESIGN §1)."""
 
     __slots__ = ("row", "seg", "width", "ptr", "final", "cin", "cout",
-                 "ent_cols", "ent_vals", "lvl", "lvl_ptr", "n_carry", "count",
-                 "has_splits")
+                 "ent_cols", "ent_vals", "ent_src", "lvl", "lvl_ptr",
+                 "n_carry", "count", "has_splits", "nnz")
 
     def __init__(self, A: CSR, level_of: np.ndarray, num_levels: int,
                  max_deps: int):
@@ -233,6 +269,8 @@ class _Lanes:
         rord = np.lexsort((np.arange(n), level_of))
         identity = bool(np.array_equal(rord, np.arange(n)))
         deg_o = deg if identity else deg[rord]
+        self.nnz = int(indptr[-1])
+        self.ent_src = None     # packed-entry order == data order
         self.has_splits = bool((deg_o > max_deps).any())
         if not self.has_splits:
             # fast path: one lane per row, dep lists stay CSR-contiguous
@@ -250,6 +288,7 @@ class _Lanes:
                     _segment_arange(deg_o)
                 self.ent_cols = A.indices[ent_gather].astype(np.int64)
                 self.ent_vals = A.data[ent_gather]
+                self.ent_src = ent_gather
                 self.ptr = np.zeros(n + 1, dtype=np.int64)
                 np.cumsum(deg_o, out=self.ptr[1:])
             self.n_carry = 1
@@ -276,6 +315,7 @@ class _Lanes:
                     _segment_arange(deg_o)
                 self.ent_cols = A.indices[ent_gather].astype(np.int64)
                 self.ent_vals = A.data[ent_gather]
+                self.ent_src = ent_gather
             self.ptr = np.zeros(self.count + 1, dtype=np.int64)
             np.cumsum(self.width, out=self.ptr[1:])
             # carry slots: nseg-1 per split row, chained in segment order
@@ -590,6 +630,8 @@ def _materialize(lanes: _Lanes, lane_step: np.ndarray, num_steps: int,
         (np.arange(lanes.ptr[-1]) - np.repeat(lanes.ptr[:-1], lanes.width))
     dep_idx_buf[dst] = lanes.ent_cols
     dep_coef_buf[dst] = ent_vals
+    plan = SchedValuePlan(nnz=lanes.nnz, ent_src=lanes.ent_src, coef_dst=dst,
+                          lane_slot=slot, lane_row=rows, lane_final=fin)
     groups = []
     for g in range(G):
         C, D = int(Cg[g]), int(Dg[g])
@@ -611,7 +653,7 @@ def _materialize(lanes: _Lanes, lane_step: np.ndarray, num_steps: int,
             dinv=dinv_buf[sl].reshape(S, C),
             carry_in=carry_in,
             carry_out=carry_out))
-    return tuple(groups)
+    return tuple(groups), plan
 
 
 # -- driver -------------------------------------------------------------------
@@ -638,7 +680,7 @@ def build_schedule(A: CSR, diag: np.ndarray, level_of: np.ndarray,
             lanes, A, np.asarray(level_of, dtype=np.int64), num_levels, chunk)
     else:
         lane_step, num_steps = _assign_level_aligned(lanes, num_levels, chunk)
-    groups = _materialize(
+    groups, plan = _materialize(
         lanes, lane_step, num_steps, diag, n, widths, max_deps, dtype,
         force_tile=(chunk, max_deps) if legacy_shape else None)
     build_ms = (time.perf_counter() - t0) * 1e3
@@ -646,7 +688,64 @@ def build_schedule(A: CSR, diag: np.ndarray, level_of: np.ndarray,
                          num_levels=num_levels, chunk=chunk,
                          max_deps=max_deps,
                          compacted=compact and not legacy_shape,
-                         build_ms=build_ms)
+                         build_ms=build_ms, value_plan=plan)
+
+
+def repack_schedule_values(sched: LevelSchedule, new_data: np.ndarray,
+                           new_diag: np.ndarray) -> LevelSchedule:
+    """Refill a schedule's numeric payload for new values on the frozen
+    pattern — the value-update fast path.
+
+    Only `dep_coef` and `dinv` change; `row_ids`/`dep_idx`/carry arrays (the
+    pattern-derived structure) are shared with the input schedule, so no
+    lane construction, step assignment, or width bucketing runs.  Fresh
+    buffers are allocated (never mutated in place): compiled engine
+    functions and staged device arrays may still reference the old ones.
+
+    `new_data` must be in the same entry order as the matrix the schedule
+    was built from (`sched.value_plan.nnz` entries); the result is bitwise
+    identical to `build_schedule` on the new values.
+    """
+    plan = sched.value_plan
+    if plan is None:
+        raise ValueError(
+            "schedule carries no SchedValuePlan — it was not produced by "
+            "build_schedule; rebuild instead of repacking")
+    vals = np.asarray(new_data)
+    if vals.shape != (plan.nnz,):
+        raise ValueError(
+            f"repack_schedule_values: expected {plan.nnz} values for the "
+            f"frozen pattern, got shape {vals.shape}")
+    t0 = time.perf_counter()
+    dtype = sched.dtype
+    n = sched.n
+    # buffer geometry reconstructed from the materialized group shapes
+    lsizes = [g.row_ids.size for g in sched.groups]
+    dsizes = [g.dep_idx.size for g in sched.groups]
+    dinv_of = np.zeros(n + 1, dtype=dtype)
+    if n:
+        dinv_of[:n] = 1.0 / np.asarray(new_diag, dtype=dtype)
+    ent_vals = vals if plan.ent_src is None else vals[plan.ent_src]
+    if ent_vals.dtype != dtype:
+        ent_vals = ent_vals.astype(dtype)
+    dep_coef_buf = np.zeros(sum(dsizes), dtype=dtype)
+    dep_coef_buf[plan.coef_dst] = ent_vals
+    dinv_buf = np.zeros(sum(lsizes), dtype=dtype)
+    if plan.lane_final.all():
+        dinv_buf[plan.lane_slot] = dinv_of[plan.lane_row]
+    else:
+        dinv_buf[plan.lane_slot] = np.where(plan.lane_final,
+                                            dinv_of[plan.lane_row], 0)
+    groups = []
+    lo = do = 0
+    for g, ls, ds in zip(sched.groups, lsizes, dsizes):
+        groups.append(dataclasses.replace(
+            g, dep_coef=dep_coef_buf[do:do + ds].reshape(g.dep_coef.shape),
+            dinv=dinv_buf[lo:lo + ls].reshape(g.dinv.shape)))
+        lo += ls
+        do += ds
+    build_ms = (time.perf_counter() - t0) * 1e3
+    return dataclasses.replace(sched, groups=tuple(groups), build_ms=build_ms)
 
 
 def validate_schedule(sched: LevelSchedule, A: CSR, diag: np.ndarray) -> None:
@@ -746,4 +845,19 @@ def schedule_for_preamble(ts, chunk: int = 256, max_deps: int = 16,
     sched = build_schedule(T2, np.ones(n_ent), lv.level_of, chunk=chunk,
                            max_deps=max_deps, dtype=dtype, compact=compact,
                            widths=widths)
+    # Compose the (pattern-only) T -> T2 renumbering permutation into the
+    # value plan, so a pattern-frozen repack consumes T.data directly.  The
+    # from_coo above mirrors its own lexsort; duplicate (row, col) pairs in
+    # T would be value-summed by it (none of the shipped strategies produce
+    # them) — the equality check drops the plan rather than risk a wrong
+    # repack, and callers fall back to rebuilding the preamble schedule.
+    t2_perm = np.lexsort((inv[T.indices], inv[rows_old]))
+    plan = sched.value_plan
+    if T2.nnz == T.nnz and plan is not None \
+            and np.array_equal(T2.data, T.data[t2_perm]):
+        ent_src = t2_perm if plan.ent_src is None else t2_perm[plan.ent_src]
+        plan = dataclasses.replace(plan, nnz=T.nnz, ent_src=ent_src)
+    else:
+        plan = None
+    sched = dataclasses.replace(sched, value_plan=plan)
     return sched, src[perm], inv[:ts.A.n_rows]

@@ -12,7 +12,8 @@ from typing import Iterable
 
 import numpy as np
 
-__all__ = ["CSR", "from_coo", "identity", "tril", "triu", "reverse_both"]
+__all__ = ["CSR", "from_coo", "identity", "tril", "triu", "reverse_both",
+           "same_pattern"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +123,21 @@ class CSR:
         return CSR(indptr=colptr, indices=rows, data=self.data[perm],
                    shape=(self.n_cols, self.n_rows))
 
+    def with_data(self, data: np.ndarray) -> "CSR":
+        """Same pattern, new values (shares indptr/indices arrays).
+
+        The primitive under the pattern-frozen refactorization paths:
+        `data` must be in this matrix's CSR entry order and is the only
+        thing that changes — no re-sort, no structural work.
+        """
+        data = np.asarray(data)
+        if data.shape != self.data.shape:
+            raise ValueError(
+                f"with_data: expected {self.data.shape[0]} values for the "
+                f"frozen pattern, got {data.shape}")
+        return CSR(indptr=self.indptr, indices=self.indices, data=data,
+                   shape=self.shape)
+
     def check(self) -> None:
         assert self.indptr.shape == (self.n_rows + 1,)
         assert self.indptr[0] == 0 and self.indptr[-1] == self.nnz
@@ -179,6 +195,21 @@ def triu(m: CSR, keep_diagonal: bool = True) -> CSR:
     keep = m.indices > rows - (1 if keep_diagonal else 0)
     return from_coo(rows[keep], m.indices[keep], m.data[keep], m.shape,
                     sum_duplicates=False)
+
+
+def same_pattern(a: CSR, b: CSR) -> bool:
+    """True when `a` and `b` have identical sparsity patterns.
+
+    Identical means the same shape and bitwise-equal indptr/indices — the
+    exact precondition of every value-only fast path (`update_values`,
+    `factorize.refactor`): equal patterns guarantee entry k of one matrix
+    addresses the same (row, col) as entry k of the other.
+    """
+    return (a.shape == b.shape
+            and a.indptr.shape == b.indptr.shape
+            and a.indices.shape == b.indices.shape
+            and np.array_equal(a.indptr, b.indptr)
+            and np.array_equal(a.indices, b.indices))
 
 
 def reverse_both(m: CSR) -> CSR:

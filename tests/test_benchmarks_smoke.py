@@ -109,6 +109,63 @@ def test_committed_iterative_artifact_guarantee():
 
 
 @pytest.mark.bench
+def test_refactor_bench_emits_table(tmp_path):
+    """BENCH_refactor.json: value-update vs full-rebuild per-step table
+    (ISSUE 7 tentpole).  Correctness fields assert at smoke scale;
+    wall-clock guarantees are held to the committed full-scale artifact
+    (test below)."""
+    from benchmarks import refactor_bench as rb
+
+    out = tmp_path / "BENCH_refactor.json"
+    rec = rb.run(out_path=str(out), scales=(0.03, 0.03), steps=2, iters=1)
+    assert out.exists()
+    assert json.loads(out.read_text()) == rec
+    for m in rec["matrices"].values():
+        assert m["exact_match_fresh"]
+        assert m["value_updates"] == m["steps"] == 2
+        assert m["update_ms"] > 0 and m["rebuild_ms"] > 0
+        assert m["solve_us"] > 0
+        assert m["strategy"]
+
+
+@pytest.mark.bench
+def test_run_smoke_has_refactor_section(tmp_path):
+    """--smoke carries a refactor_smoke section (wired in benchmarks.run)."""
+    from benchmarks import refactor_bench as rb
+    from benchmarks import run as brun
+    import inspect
+
+    # the section is produced by the same driver smoke() calls; assert the
+    # wiring without re-running the whole aggregator (covered above)
+    assert "refactor_smoke" in inspect.getsource(brun.smoke)
+    rec = rb.run(out_path=None, scales=(0.03, 0.03), steps=1, iters=1)
+    assert set(rec["matrices"]) == {"lung2_like@0.03", "torso2_like@0.03"}
+
+
+@pytest.mark.bench
+def test_committed_refactor_artifact_guarantee():
+    """The committed experiments/BENCH_refactor.json upholds the ISSUE 7
+    acceptance criterion on both analogues: the amortized per-step cost of
+    the update fast path is <= the full re-tuned rebuild cost, the updated
+    operator matches a fresh build bitwise, and the amortized step cost
+    sits far closer to pure solve cost than the rebuild regime."""
+    from pathlib import Path
+
+    src = Path("experiments/BENCH_refactor.json")
+    assert src.exists(), "run benchmarks.refactor_bench to regenerate"
+    data = json.loads(src.read_text())
+    assert set(data["matrices"]) == {
+        f"lung2_like@{data['config']['scales'][0]}",
+        f"torso2_like@{data['config']['scales'][1]}"}
+    for m in data["matrices"].values():
+        assert m["update_not_slower_than_rebuild"]
+        assert m["amortized_update_le_rebuild"]
+        assert m["exact_match_fresh"]
+        assert m["amortized_update_step_ms"] <= m["amortized_rebuild_step_ms"]
+        assert m["update_step_over_solve"] <= m["rebuild_step_over_solve"]
+
+
+@pytest.mark.bench
 def test_run_smoke_has_distributed_section(tmp_path):
     """--smoke carries a distributed_smoke section: sharded solves checked
     on the available devices, with the barrier invariant intact."""
