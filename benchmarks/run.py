@@ -19,6 +19,9 @@ Sections:
                     table (BENCH_distributed.json; full mode runs in a
                     subprocess with 8 forced host devices, smoke runs
                     in-process on the available devices)
+  serving         — solve-service load sweep: micro-batched throughput
+                    vs sequential, cold-start latency anatomy, hot-swap
+                    guarantee (BENCH_serving.json)
 
 --smoke runs every section at reduced scale (seconds, not minutes) so the
 tier-1 suite can import-check and execute the drivers (pytest -m bench).
@@ -100,6 +103,7 @@ def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
     import benchmarks.level_profiles as lp
     import benchmarks.operator_bench as ob
     import benchmarks.refactor_bench as rb
+    import benchmarks.serving_bench as svb
     import benchmarks.solver_bench as sb
     import benchmarks.table1 as t1
     from repro.sparse import generators
@@ -122,12 +126,15 @@ def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
     it_rec = ib.run(out_path=iterative_out, scales=(0.02, 0.02), iters=1,
                     maxiter=200, measure_top_k=2)
     refactor = rb.run(out_path=None, scales=(0.04, 0.04), steps=2, iters=1)
+    serving = svb.run(out_path=None, scales=(0.03, 0.03), widths=(1, 4),
+                      rounds=3)
     rec = bench_schedule(None, scales=(0.08, 0.06), reps=2,
                          time_solve=False)
     rec["engines"] = engines
     rec["iterative"] = it_rec
     rec["distributed_smoke"] = distributed
     rec["refactor_smoke"] = refactor
+    rec["serving_smoke"] = serving
     if out_path:        # persist WITH the engine section (record == file)
         p = Path(out_path)
         p.parent.mkdir(parents=True, exist_ok=True)
@@ -184,6 +191,10 @@ def main() -> None:
           "(8 forced host devices, subprocess) ==")
     from benchmarks import distributed_bench
     distributed_bench.run(out_path="experiments/BENCH_distributed.json")
+    print("\n== Solve service: micro-batched load sweep + cold-start "
+          "anatomy ==")
+    from benchmarks import serving_bench
+    serving_bench.run(out_path="experiments/BENCH_serving.json")
     _roofline_summary()
     print(f"\ntotal {time.time() - t0:.1f}s")
 

@@ -1,0 +1,212 @@
+"""Solve-service benchmark -> experiments/BENCH_serving.json.
+
+Two claims the serving tier (src/repro/serving/) is judged by, measured
+on both benchmark analogues:
+
+1. **Micro-batching wins at load.**  A closed-loop sweep drives the
+   service with c concurrent clients at batcher width c (c = 1, 2, 4,
+   ...): every client submits one request at a time and waits, so
+   offered load rises with c while the batcher coalesces concurrent
+   requests into one (n, c) solve.  Reported per point: throughput
+   (requests/s), p50/p99 request latency, and the achieved mean batch
+   width.  The headline boolean `batched_beats_sequential` asserts
+   throughput at saturation (the widest point) exceeds the sequential
+   baseline — a bare `op.solve(b)` loop on one thread with zero service
+   overhead.
+
+2. **Tuning never blocks admission.**  A fresh background-mode service
+   is cold-started on the matrix: the first request's response time is
+   compared against (a) a direct untuned `no_rewriting` build + solve —
+   admission's latency budget — and (b) the full portfolio-tuned build,
+   which is what a naive serve-after-tune design would charge the first
+   request.  `cold_start_not_tuner_bound` asserts the first response
+   landed well under the tuned-build regime, and `hot_swap_landed`
+   asserts the background tune still arrived afterwards.
+
+As everywhere in benchmarks/, the committed-artifact test asserts the
+BOOLEAN guarantees of the full-scale record; wall-clock numbers are
+context, never assertions at smoke scale.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.serving import OperatorRegistry, SolveService
+from repro.solver import TriangularOperator
+from repro.sparse import generators
+
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def _closed_loop(svc: SolveService, L, b, *, clients: int,
+                 rounds: int) -> dict:
+    """`clients` threads, each submitting one request at a time."""
+    lat_ms = [[] for _ in range(clients)]
+
+    def client(j: int) -> None:
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            svc.submit(b, L, tenant=f"c{j}").result(timeout=300)
+            lat_ms[j].append((time.perf_counter() - t0) * 1e3)
+
+    t0 = time.perf_counter()
+    with concurrent.futures.ThreadPoolExecutor(max_workers=clients) as pool:
+        list(pool.map(client, range(clients)))
+    elapsed = time.perf_counter() - t0
+    flat = [x for series in lat_ms for x in series]
+    return {"clients": clients, "requests": clients * rounds,
+            "elapsed_s": round(elapsed, 3),
+            "throughput_rps": round(clients * rounds / elapsed, 1),
+            "p50_ms": round(_percentile(flat, 50), 3),
+            "p99_ms": round(_percentile(flat, 99), 3)}
+
+
+def bench_cold_start(L, b, *, chunk: int = 256, max_deps: int = 16) -> dict:
+    """Cold-start latency anatomy: untuned direct build vs service first
+    response (background tuning) vs the full tuned build."""
+    kw = dict(chunk=chunk, max_deps=max_deps, cache=False)
+    # admission's latency budget: plain level scheduling + first solve
+    t0 = time.perf_counter()
+    op = TriangularOperator.from_csr(L, tune="no_rewriting", **kw)
+    op.solve(b, max_refine=0)
+    untuned_ms = (time.perf_counter() - t0) * 1e3
+    # what serve-after-tune would charge the first request
+    t0 = time.perf_counter()
+    TriangularOperator.from_csr(L, tune="auto", **kw)
+    tuned_build_ms = (time.perf_counter() - t0) * 1e3
+
+    svc = SolveService(max_width=8, max_linger_s=0.001, workers=2,
+                       tune_mode="background", **kw)
+    try:
+        t0 = time.perf_counter()
+        svc.submit(b, L).result(timeout=300)
+        first_response_ms = (time.perf_counter() - t0) * 1e3
+        warmed = svc.wait_warm(timeout=600)
+        snap = svc.snapshot()
+    finally:
+        svc.close()
+    hot_swaps = snap["registry"]["hot_swaps"]
+    return {
+        "untuned_build_solve_ms": round(untuned_ms, 1),
+        "tuned_build_ms": round(tuned_build_ms, 1),
+        "first_response_ms": round(first_response_ms, 1),
+        "admission_overhead_ms": round(first_response_ms - untuned_ms, 1),
+        "hot_swap_landed": bool(warmed and hot_swaps >= 1),
+        # the first response must track the untuned budget (generous
+        # allowance for jit/session noise) ...
+        "cold_start_le_untuned": bool(
+            first_response_ms <= 1.5 * untuned_ms + 100.0),
+        # ... and must clearly NOT have waited for the portfolio tuner
+        "cold_start_not_tuner_bound": bool(
+            first_response_ms < untuned_ms + 0.5 * tuned_build_ms),
+    }
+
+
+def bench_matrix(L, *, widths=(1, 2, 4, 8, 16), rounds: int = 20,
+                 chunk: int = 256, max_deps: int = 16,
+                 linger_s: float = 0.005) -> dict:
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(L.n_rows)
+
+    cold = bench_cold_start(L, b, chunk=chunk, max_deps=max_deps)
+
+    # one tuned registry shared by every sweep point: the sweep measures
+    # the batching tier, not repeated tuning
+    registry = OperatorRegistry(tune_mode="sync", chunk=chunk,
+                                max_deps=max_deps, cache=False)
+    try:
+        entry, _, _ = registry.admit(L)
+        op = entry.op
+        op.solve(b, max_refine=0)           # prime compiled fns + preamble
+        # prime every padded batch shape the sweep can produce: the
+        # service pads to power-of-two width buckets (service.pad_widths),
+        # so these are the only multi-column shapes the engines will see
+        k = 2
+        while k <= 1 << (max(widths) - 1).bit_length():
+            op.solve(np.zeros((L.n_rows, k), dtype=np.float32),
+                     max_refine=0)
+            k *= 2
+
+        # sequential baseline: zero service overhead, zero batching
+        n_seq = max(widths) * rounds
+        t0 = time.perf_counter()
+        for _ in range(n_seq):
+            op.solve(b, max_refine=0)
+        seq_elapsed = time.perf_counter() - t0
+        sequential = {"requests": n_seq,
+                      "throughput_rps": round(n_seq / seq_elapsed, 1),
+                      "mean_ms": round(seq_elapsed / n_seq * 1e3, 3)}
+
+        sweep = []
+        for w in widths:
+            svc = SolveService(max_width=w, max_linger_s=linger_s,
+                               workers=2, registry=registry)
+            try:
+                svc.submit(b, L).result(timeout=300)    # warm the path
+                point = _closed_loop(svc, L, b, clients=w, rounds=rounds)
+                point["width"] = w
+                point["mean_batch_width"] = round(
+                    svc.stats.mean_width(), 2)
+                sweep.append(point)
+            finally:
+                svc.close()
+    finally:
+        registry.close()
+
+    saturation = sweep[-1]
+    return {
+        "n": L.n_rows, "nnz": L.nnz, "strategy": op.strategy,
+        "cold_start": cold,
+        "sequential": sequential,
+        "load_sweep": sweep,
+        "saturation_speedup_vs_sequential": round(
+            saturation["throughput_rps"] / sequential["throughput_rps"], 2),
+        # boolean guarantees (committed-artifact test)
+        "batched_beats_sequential": bool(
+            saturation["throughput_rps"] > sequential["throughput_rps"]),
+        "tuning_never_blocked": bool(cold["cold_start_le_untuned"]
+                                     and cold["cold_start_not_tuner_bound"]),
+        "hot_swap_landed": cold["hot_swap_landed"],
+    }
+
+
+def run(out_path="experiments/BENCH_serving.json", scales=(0.1, 0.08),
+        widths=(1, 2, 4, 8, 16), rounds: int = 20, chunk: int = 256,
+        max_deps: int = 16) -> dict:
+    record = {
+        "config": {"chunk": chunk, "max_deps": max_deps,
+                   "scales": list(scales), "widths": list(widths),
+                   "rounds": rounds, "solve_kwargs": {"max_refine": 0}},
+        "matrices": {},
+    }
+    for name, L in (
+            (f"lung2_like@{scales[0]}", generators.lung2_like(scales[0])),
+            (f"torso2_like@{scales[1]}", generators.torso2_like(scales[1]))):
+        m = bench_matrix(L, widths=widths, rounds=rounds, chunk=chunk,
+                         max_deps=max_deps)
+        record["matrices"][name] = m
+        sat = m["load_sweep"][-1]
+        print(f"{name}: seq {m['sequential']['throughput_rps']} rps -> "
+              f"width {sat['width']} {sat['throughput_rps']} rps "
+              f"({m['saturation_speedup_vs_sequential']}x, mean batch "
+              f"{sat['mean_batch_width']}, p99 {sat['p99_ms']}ms); cold "
+              f"first response {m['cold_start']['first_response_ms']}ms vs "
+              f"untuned {m['cold_start']['untuned_build_solve_ms']}ms / "
+              f"tuned {m['cold_start']['tuned_build_ms']}ms, "
+              f"hot_swap={m['hot_swap_landed']}")
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -34,7 +34,7 @@ __all__ = [
     "poison_schedule", "scale_schedule", "nan_schedule_payload",
     "wrong_schedule_values", "corrupt_values_payload", "pattern_drift",
     "corrupt_cache_entries", "fail_engine_compile",
-    "engine_unavailable", "lose_mesh",
+    "engine_unavailable", "lose_mesh", "fail_tuner", "slow_tuner",
 ]
 
 
@@ -214,6 +214,49 @@ def engine_unavailable(name: str):
     eng = get_engine(name)
     with _patched(eng, "available", lambda: False):
         yield
+
+
+# -- tuner faults -------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def fail_tuner(exc=None):
+    """Every `StrategyPortfolio.tune` call inside the context raises — the
+    fault class a serving tier's BACKGROUND tuning worker must survive:
+    admission already served the untuned operator, so a tuner blow-up may
+    degrade the entry (no hot-swap, `TunerFailureWarning`) but must never
+    poison it or block the request path.  Yields {"calls": n} for
+    asserting the fault actually fired."""
+    from .portfolio import StrategyPortfolio
+    count = {"calls": 0}
+
+    def faulty(self, L):
+        count["calls"] += 1
+        raise (exc if exc is not None else RuntimeError(
+            f"injected tuner failure (call {count['calls']})"))
+
+    with _patched(StrategyPortfolio, "tune", faulty):
+        yield count
+
+
+@contextlib.contextmanager
+def slow_tuner(delay_s: float = 0.5):
+    """Every `StrategyPortfolio.tune` call inside the context stalls for
+    `delay_s` before running for real — the stalled-background-tuner fault:
+    entries stay "warming" while requests keep flowing through the untuned
+    operator, and the eventual hot-swap still lands.  Yields {"calls": n}."""
+    import time
+    from .portfolio import StrategyPortfolio
+    real = StrategyPortfolio.tune
+    count = {"calls": 0}
+
+    def slow(self, L):
+        count["calls"] += 1
+        time.sleep(delay_s)
+        return real(self, L)
+
+    with _patched(StrategyPortfolio, "tune", slow):
+        yield count
 
 
 # -- mesh faults --------------------------------------------------------------

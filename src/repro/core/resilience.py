@@ -27,16 +27,23 @@ Error taxonomy
     │                            `.where`, and `.fallbacks` attempted
     ├── EngineFallbackError      every engine in a fallback chain failed;
     │                            carries `.attempts` [(engine, reason), ...]
-    └── PatternMismatchError     a value-only refactorization (`update_values`
-                                 / `Preconditioner.refactor`) was handed a
-                                 matrix whose sparsity pattern differs from
-                                 the frozen one; carries `.where` and
-                                 `.detail` (docs/refactorization.md)
+    ├── PatternMismatchError     a value-only refactorization (`update_values`
+    │                            / `Preconditioner.refactor`) was handed a
+    │                            matrix whose sparsity pattern differs from
+    │                            the frozen one; carries `.where` and
+    │                            `.detail` (docs/refactorization.md)
+    └── AdmissionError           the serving tier rejected a request before
+                                 it entered a queue (per-tenant depth cap,
+                                 closed service); carries `.tenant`,
+                                 `.depth`, `.limit` (docs/serving.md)
 
     ResilienceWarning(UserWarning)
     ├── EngineFallbackWarning    an engine was downgraded (never silent)
     ├── HealthRepairWarning      a health violation was repaired/fallen back
-    └── CacheQuarantineWarning   a corrupt/stale cache entry was quarantined
+    ├── CacheQuarantineWarning   a corrupt/stale cache entry was quarantined
+    └── TunerFailureWarning      a background tuning job failed or was
+                                 abandoned; the service keeps serving the
+                                 untuned operator (docs/serving.md)
 
 Health policy
 =============
@@ -57,9 +64,9 @@ import numpy as np
 
 __all__ = [
     "ResilienceError", "NumericalHealthError", "EngineFallbackError",
-    "PatternMismatchError",
+    "PatternMismatchError", "AdmissionError",
     "ResilienceWarning", "EngineFallbackWarning", "HealthRepairWarning",
-    "CacheQuarantineWarning",
+    "CacheQuarantineWarning", "TunerFailureWarning",
     "HealthPolicy", "SolveGuard", "RetryPolicy", "resolve_health_policy",
 ]
 
@@ -131,6 +138,29 @@ class PatternMismatchError(ResilienceError):
         super().__init__(f"{where + ': ' if where else ''}{message}{tail}")
 
 
+class AdmissionError(ResilienceError):
+    """The serving tier rejected a request before it entered a queue.
+
+    Raised eagerly by `repro.serving.SolveService.submit` — a rejected
+    request never consumes queue capacity, never holds a future, and the
+    caller can retry/shed load immediately (docs/serving.md).
+
+    tenant: the tenant whose request was rejected.
+    depth:  the tenant's in-flight depth at rejection time.
+    limit:  the configured cap (None when the rejection is not depth-based,
+            e.g. submitting to a closed service).
+    """
+
+    def __init__(self, message: str, *, tenant: str = "default",
+                 depth: int = 0, limit: int | None = None):
+        self.tenant = tenant
+        self.depth = depth
+        self.limit = limit
+        tail = f" (tenant {tenant!r}: depth {depth}" + \
+            (f" >= cap {limit})" if limit is not None else ")")
+        super().__init__(f"{message}{tail}")
+
+
 class ResilienceWarning(UserWarning):
     """Base class for resilience-layer warnings (downgrades are loud)."""
 
@@ -145,6 +175,15 @@ class HealthRepairWarning(ResilienceWarning):
 
 class CacheQuarantineWarning(ResilienceWarning):
     """A corrupt/stale disk-cache entry was quarantined to `.bad/`."""
+
+
+class TunerFailureWarning(ResilienceWarning):
+    """A background tuning job failed; the untuned operator keeps serving.
+
+    Emitted by `repro.serving.OperatorRegistry` when a `StrategyPortfolio`
+    run raises off the request path: the entry is marked "degraded"
+    (visible in `ServiceStats`/`registry.snapshot()`), requests continue
+    through the admitted `no_rewriting` operator, and nothing blocks."""
 
 
 # -- health policy ------------------------------------------------------------

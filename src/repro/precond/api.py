@@ -37,6 +37,7 @@ from __future__ import annotations
 import collections
 import dataclasses as _dc
 import hashlib
+import threading
 
 import numpy as np
 
@@ -72,6 +73,11 @@ class Preconditioner:
     # forever
     _pair_decisions: collections.OrderedDict = collections.OrderedDict()
     _pair_decisions_max: int = 16
+    # memo mutations must be atomic under concurrent preconditioner
+    # construction (serving-tier background tuning); the tuning itself
+    # runs OUTSIDE the lock — two racing builders may both tune, but the
+    # memo never interleaves a move_to_end with an eviction
+    _pair_lock = threading.RLock()
 
     def __init__(self, factors: FactorResult, forward: TriangularOperator,
                  backward: TriangularOperator, report=None):
@@ -187,10 +193,11 @@ class Preconditioner:
                    else tuple(sorted(_dc.asdict(cost_model).items())))
             key = matrix_fingerprint(system) + "-" + hashlib.sha256(
                 repr(cfg).encode()).hexdigest()[:16]
-            hit = cls._pair_decisions.get(key)
-            if hit is not None:
-                cls._pair_decisions.move_to_end(key)
-                return hit
+            with cls._pair_lock:
+                hit = cls._pair_decisions.get(key)
+                if hit is not None:
+                    cls._pair_decisions.move_to_end(key)
+                    return hit
         fwd_sys, _ = orient_lower(fac.L, "lower", False)
         if fac.kind == "ic0":
             bwd_sys, bwd_rev = orient_lower(fac.L, "lower", True)
@@ -209,10 +216,11 @@ class Preconditioner:
         best = next(c for c in pair.fwd.candidates if c.label == best_label)
         decision = (best.strategy, pair.slim())
         if key is not None:
-            cls._pair_decisions[key] = decision
-            cls._pair_decisions.move_to_end(key)
-            while len(cls._pair_decisions) > cls._pair_decisions_max:
-                cls._pair_decisions.popitem(last=False)
+            with cls._pair_lock:
+                cls._pair_decisions[key] = decision
+                cls._pair_decisions.move_to_end(key)
+                while len(cls._pair_decisions) > cls._pair_decisions_max:
+                    cls._pair_decisions.popitem(last=False)
         return decision
 
     @staticmethod
@@ -284,7 +292,8 @@ class Preconditioner:
 
     @classmethod
     def clear_pair_decisions(cls) -> None:
-        cls._pair_decisions.clear()
+        with cls._pair_lock:
+            cls._pair_decisions.clear()
 
     def refactor(self, new_A: CSR, **factor_kwargs) -> "Preconditioner":
         """Numeric-only re-preconditioning for a new A on the SAME pattern.

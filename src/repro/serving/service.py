@@ -1,0 +1,366 @@
+"""SolveService: the multi-tenant front door over batcher + registry.
+
+One object owns the whole request path:
+
+    with SolveService(max_width=16, max_linger_s=0.002) as svc:
+        fut = svc.submit(b, matrix=L, tenant="alice")   # future
+        x = fut.result()
+        x = svc.solve(b2, matrix=L)                     # sync sugar
+
+`submit` admits the matrix through the `OperatorRegistry` (cold builds
+are synchronous but untuned; tuning runs behind — see registry.py),
+enforces the per-tenant in-flight cap (a typed
+`repro.core.resilience.AdmissionError` on overflow; one tenant's burst
+cannot exhaust another's headroom), and enqueues into the
+`MicroBatcher`.  Batches flush by width (inline, on the submitting
+thread's notification) or by linger deadline (the dispatcher thread
+sleeps until `next_deadline()`), and execute on a small worker pool:
+under the owning entry's lock, the batch's value fingerprint is
+re-bound via `ensure_values`, the stacked (n, k) right-hand side is
+solved once, and each column resolves its request's future.
+
+Determinism for tests: construct with `auto_dispatch=False` and no
+thread is spawned — width-full batches queue instead of dispatching,
+and `pump()` drains everything synchronously on the calling thread, so
+batching behavior is exactly reproducible.
+
+`ServiceStats` is the observability plane: request/batch counters, the
+batch-width histogram (is coalescing actually happening?), cache-hit
+sources (registry vs the operator cache's built/memory/disk/pattern),
+and separate queue-vs-solve latency reservoirs with percentiles — plus
+the registry's lifecycle counters (states, hot swaps, tuner failures)
+merged into every snapshot.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import threading
+import time
+
+import numpy as np
+
+from ..core.resilience import AdmissionError
+from .batcher import MicroBatcher, SolveRequest
+from .registry import EntryKey, OperatorRegistry
+
+__all__ = ["SolveService", "ServiceStats"]
+
+_RESERVOIR = 100_000     # latency samples retained per series
+
+
+def _percentile(samples, q: float) -> float:
+    """Nearest-rank percentile of a list (NaN when empty)."""
+    if not samples:
+        return float("nan")
+    s = sorted(samples)
+    rank = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    return float(s[rank])
+
+
+class ServiceStats:
+    """Thread-safe counters + latency reservoirs for one SolveService."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0            # AdmissionError (tenant cap)
+        self.failed = 0              # requests resolved with an exception
+        self.batches = 0
+        self.batch_errors = 0
+        self.width_hist = collections.Counter()     # batch width -> count
+        self.flush_reasons = collections.Counter()  # width | linger | drain
+        self.cache_sources = collections.Counter()  # registry|built|memory|...
+        self.rejected_by_tenant = collections.Counter()
+        self.queue_ms: list = []     # enqueue -> dispatch, per request
+        self.solve_ms: list = []     # dispatch -> solved, per batch
+
+    # -- recording ------------------------------------------------------------
+    def record_submit(self, source: str) -> None:
+        with self._lock:
+            self.submitted += 1
+            self.cache_sources[source] += 1
+
+    def record_reject(self, tenant: str) -> None:
+        with self._lock:
+            self.rejected += 1
+            self.rejected_by_tenant[tenant] += 1
+
+    def record_batch(self, batch, queue_ms, solve_ms: float) -> None:
+        with self._lock:
+            self.batches += 1
+            self.completed += batch.width
+            self.width_hist[batch.width] += 1
+            self.flush_reasons[batch.reason] += 1
+            if len(self.queue_ms) < _RESERVOIR:
+                self.queue_ms.extend(queue_ms)
+            if len(self.solve_ms) < _RESERVOIR:
+                self.solve_ms.append(solve_ms)
+
+    def record_batch_error(self, batch) -> None:
+        with self._lock:
+            self.batches += 1
+            self.batch_errors += 1
+            self.failed += batch.width
+            self.width_hist[batch.width] += 1
+            self.flush_reasons[batch.reason] += 1
+
+    # -- reading --------------------------------------------------------------
+    def mean_width(self) -> float:
+        with self._lock:
+            n = sum(self.width_hist.values())
+            return (sum(w * c for w, c in self.width_hist.items()) / n
+                    if n else float("nan"))
+
+    def snapshot(self, registry: OperatorRegistry | None = None) -> dict:
+        with self._lock:
+            snap = {
+                "submitted": self.submitted, "completed": self.completed,
+                "rejected": self.rejected, "failed": self.failed,
+                "batches": self.batches, "batch_errors": self.batch_errors,
+                "width_hist": dict(sorted(self.width_hist.items())),
+                "flush_reasons": dict(self.flush_reasons),
+                "cache_sources": dict(self.cache_sources),
+                "rejected_by_tenant": dict(self.rejected_by_tenant),
+                "queue_ms": {"p50": _percentile(self.queue_ms, 50),
+                             "p99": _percentile(self.queue_ms, 99)},
+                "solve_ms": {"p50": _percentile(self.solve_ms, 50),
+                             "p99": _percentile(self.solve_ms, 99)},
+            }
+        n = sum(snap["width_hist"].values())
+        snap["mean_width"] = (sum(w * c for w, c in snap["width_hist"]
+                                  .items()) / n) if n else float("nan")
+        if registry is not None:
+            reg = registry.stats()
+            reg.pop("entries", None)    # per-entry detail stays opt-in
+            snap["registry"] = reg
+        return snap
+
+
+class SolveService:
+    """Multi-tenant micro-batching solve service (see module doc).
+
+    max_width / max_linger_s: the batcher's flush policy.
+    tenant_cap:   per-tenant in-flight request bound (None = unlimited);
+                  exceeding it raises AdmissionError instead of queueing.
+    workers:      batched-solve worker threads (distinct keys solve
+                  concurrently; one key's batches serialize on its entry
+                  lock regardless, so more workers than hot keys is waste).
+    auto_dispatch: False spawns NO threads — batches accumulate until
+                  `pump()` runs them on the calling thread (deterministic
+                  tests); width/linger policy is otherwise identical.
+    pad_widths:   pad every multi-column batch to the next power-of-two
+                  width with zero columns before solving (default True).
+                  The engines jit-compile per right-hand-side shape, so
+                  unpadded serving retraces on every new batch width —
+                  a ~100ms stall mid-traffic; bucketing caps the shape
+                  set at log2(max_width) + 1, the same trick the
+                  schedule compiler plays with width-bucketed ELL tiles.
+                  Zero columns solve to zero and are sliced off before
+                  futures resolve.
+    solve_kwargs: forwarded to every TriangularOperator.solve; the default
+                  {"max_refine": 0} is the raw float32 device path —
+                  serving wants throughput, callers wanting refined
+                  float64 pass {"max_refine": 6} etc.
+    registry:     a pre-configured OperatorRegistry; default builds one
+                  from **registry_kwargs (tune_mode=, cache=, ...).
+    """
+
+    def __init__(self, *, max_width: int = 16, max_linger_s: float = 0.002,
+                 tenant_cap: int | None = 64, workers: int = 2,
+                 auto_dispatch: bool = True, pad_widths: bool = True,
+                 solve_kwargs: dict | None = None,
+                 registry: OperatorRegistry | None = None,
+                 **registry_kwargs):
+        # a caller-supplied registry is shared state (e.g. one tuned
+        # registry reused across benchmark sweeps): the service never
+        # closes it
+        self._own_registry = registry is None
+        self.registry = registry if registry is not None \
+            else OperatorRegistry(**registry_kwargs)
+        self.tenant_cap = tenant_cap
+        self.solve_kwargs = {"max_refine": 0} if solve_kwargs is None \
+            else dict(solve_kwargs)
+        self.stats = ServiceStats()
+        self.pad_widths = bool(pad_widths)
+        self._clock = time.perf_counter
+        self._batcher = MicroBatcher(max_width=max_width,
+                                     max_linger_s=max_linger_s)
+        self._cond = threading.Condition()
+        self._pending: list = []          # batches awaiting pump/dispatch
+        self._inflight = collections.Counter()      # tenant -> open requests
+        self._tenant_lock = threading.Lock()
+        self._closed = False
+        self._auto = bool(auto_dispatch)
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max(1, workers), thread_name_prefix="repro-solve") \
+            if self._auto else None
+        self._dispatcher = None
+        if self._auto:
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, name="repro-dispatch",
+                daemon=True)
+            self._dispatcher.start()
+
+    # -- request path ---------------------------------------------------------
+    def submit(self, b, matrix, *, tenant: str = "default",
+               dtype: str = "float32", side: str = "lower",
+               transpose: bool = False) -> concurrent.futures.Future:
+        """Admit `matrix` (cold patterns build untuned, synchronously) and
+        enqueue one solve of `b` against it.  Returns a Future resolving
+        to the solution column; raises AdmissionError when `tenant`
+        already has `tenant_cap` requests in flight."""
+        if self._closed:
+            raise RuntimeError("service is closed")
+        with self._tenant_lock:
+            depth = self._inflight[tenant]
+            if self.tenant_cap is not None and depth >= self.tenant_cap:
+                self.stats.record_reject(tenant)
+                raise AdmissionError("tenant queue depth cap reached",
+                                     tenant=tenant, depth=depth,
+                                     limit=self.tenant_cap)
+            self._inflight[tenant] += 1
+        try:
+            entry, bkey, created = self.registry.admit(
+                matrix, dtype=dtype, side=side, transpose=transpose)
+        except BaseException:
+            self._release(tenant)
+            raise
+        b = np.asarray(b)
+        if b.ndim != 1 or b.shape[0] != matrix.n_rows:
+            # reject HERE: a wrong-shape column must fail its own request,
+            # never reach stack() and poison a shared batch
+            self._release(tenant)
+            raise ValueError(
+                f"b must be ({matrix.n_rows},), got {b.shape}")
+        # cold admissions surface the operator cache's source (built /
+        # memory / disk / pattern); warm ones hit the live registry
+        self.stats.record_submit(
+            entry.op.stats.cache_source if created else "registry")
+        fut = concurrent.futures.Future()
+        fut.add_done_callback(lambda _f, t=tenant: self._release(t))
+        req = SolveRequest(key=bkey, b=b, tenant=tenant, future=fut)
+        with self._cond:
+            if self._closed:    # closed between the early check and here:
+                fut.cancel()    # cancellation releases the tenant slot
+                raise RuntimeError("service is closed")
+            batch = self._batcher.enqueue(req, self._clock())
+            if batch is not None and not self._auto:
+                self._pending.append(batch)
+            self._cond.notify()
+        if batch is not None and self._auto:
+            self._pool.submit(self._run_batch, batch)
+        return fut
+
+    def solve(self, b, matrix, **kwargs) -> np.ndarray:
+        """Synchronous sugar: submit and wait."""
+        return self.submit(b, matrix, **kwargs).result()
+
+    def _release(self, tenant: str) -> None:
+        with self._tenant_lock:
+            self._inflight[tenant] -= 1
+            if self._inflight[tenant] <= 0:
+                del self._inflight[tenant]
+
+    def inflight(self, tenant: str | None = None) -> int:
+        with self._tenant_lock:
+            return sum(self._inflight.values()) if tenant is None \
+                else self._inflight[tenant]
+
+    # -- dispatch -------------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cond:
+                if self._closed:
+                    batches = self._batcher.flush_all(self._clock())
+                else:
+                    now = self._clock()
+                    deadline = self._batcher.next_deadline()
+                    if deadline is None or deadline > now:
+                        timeout = 0.05 if deadline is None \
+                            else min(deadline - now, 0.05)
+                        self._cond.wait(timeout=timeout)
+                        continue
+                    batches = self._batcher.due(now)
+            for batch in batches:
+                self._pool.submit(self._run_batch, batch)
+            if self._closed:
+                return
+
+    def pump(self) -> int:
+        """Drain every queued request synchronously on the calling thread
+        (auto_dispatch=False mode); returns the number of batches run."""
+        with self._cond:
+            batches, self._pending = self._pending, []
+            batches += self._batcher.flush_all(self._clock())
+        for batch in batches:
+            self._run_batch(batch)
+        return len(batches)
+
+    def _run_batch(self, batch) -> None:
+        t0 = self._clock()
+        key = batch.key
+        try:
+            entry = self.registry.get(EntryKey(
+                pattern_fp=key.pattern_fp, dtype=key.dtype, side=key.side,
+                transpose=key.transpose))
+            if entry is None:
+                raise RuntimeError(
+                    f"no registry entry for pattern {key.pattern_fp[:8]} "
+                    "(evicted mid-flight?)")
+            B = batch.stack()
+            if self.pad_widths and B.ndim == 2:
+                bucket = 1 << (B.shape[1] - 1).bit_length()
+                if bucket > B.shape[1]:
+                    B = np.concatenate(
+                        [B, np.zeros((B.shape[0], bucket - B.shape[1]),
+                                     dtype=B.dtype)], axis=1)
+            # one lock span covers re-bind + solve: a concurrent value
+            # update or hot-swap lands before or after this batch, never
+            # inside it
+            with entry.lock:
+                op = entry.ensure_values(key.value_fp)
+                x = op.solve(B, **self.solve_kwargs)
+        except BaseException as exc:   # noqa: BLE001 - resolve the futures
+            for r in batch.requests:
+                if r.future is not None and not r.future.done():
+                    r.future.set_exception(exc)
+            self.stats.record_batch_error(batch)
+            return
+        t1 = self._clock()
+        for j, r in enumerate(batch.requests):
+            if r.future is not None:
+                r.future.set_result(np.array(batch.column(x, j)))
+        self.stats.record_batch(
+            batch, [(t0 - r.t_enqueue) * 1e3 for r in batch.requests],
+            (t1 - t0) * 1e3)
+
+    # -- observability --------------------------------------------------------
+    def snapshot(self) -> dict:
+        return self.stats.snapshot(self.registry)
+
+    def wait_warm(self, timeout: float | None = None) -> bool:
+        return self.registry.wait_warm(timeout)
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self, wait: bool = True) -> None:
+        """Stop intake, drain queued batches, stop workers and tuner."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        if self._auto:
+            self._dispatcher.join(timeout=5.0)
+            self._pool.shutdown(wait=wait)
+        else:
+            self.pump()
+        if self._own_registry:
+            self.registry.close(wait=wait)
+
+    def __enter__(self) -> "SolveService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import collections
 import os
+import threading
 import warnings
 
 __all__ = ["Engine", "ScanEngine", "UnrolledEngine", "PallasEngine",
@@ -230,6 +231,11 @@ class ShardedEngine(Engine):
         # eviction only costs a re-lowering on a later compile
         self._lowered: "collections.OrderedDict" = collections.OrderedDict()
         self._lowered_max: int = 32
+        # serving-tier workers compile from multiple threads; an OrderedDict
+        # mid-move_to_end/popitem must not be mutated concurrently.  Held
+        # across the lowering itself so one schedule is lowered once, not
+        # racing-ly re-padded by every thread that misses
+        self._lowered_lock = threading.RLock()
 
     def available(self) -> bool:
         try:
@@ -264,17 +270,19 @@ class ShardedEngine(Engine):
         host = getattr(dsched, "host", dsched)
         mesh = self.resolve_mesh()
         key = (id(host), mesh, self.axis)
-        hit = self._lowered.get(key)
-        if hit is not None and hit[0]() is host:
-            self._lowered.move_to_end(key)
-            return hit[1]
-        fn = lower_sharded(host, mesh, axis=self.axis)
-        for k in [k for k, v in self._lowered.items() if v[0]() is None]:
-            del self._lowered[k]                     # drop collected entries
-        self._lowered[key] = (weakref.ref(host), fn)
-        while len(self._lowered) > self._lowered_max:
-            self._lowered.popitem(last=False)
-        return fn
+        with self._lowered_lock:
+            hit = self._lowered.get(key)
+            if hit is not None and hit[0]() is host:
+                self._lowered.move_to_end(key)
+                return hit[1]
+            fn = lower_sharded(host, mesh, axis=self.axis)
+            for k in [k for k, v in self._lowered.items()
+                      if v[0]() is None]:
+                del self._lowered[k]                 # drop collected entries
+            self._lowered[key] = (weakref.ref(host), fn)
+            while len(self._lowered) > self._lowered_max:
+                self._lowered.popitem(last=False)
+            return fn
 
 
 # -- fallback chains ----------------------------------------------------------
@@ -326,6 +334,9 @@ _REGISTRY: dict[str, Engine] = {}
 # (and their closed-over staged schedules) forever
 _SHARDED_INSTANCES: collections.OrderedDict = collections.OrderedDict()
 _SHARDED_INSTANCES_MAX = 8
+# concurrent sharded_engine() resolutions (serving workers under mesh=)
+# must not interleave OrderedDict eviction
+_SHARDED_INSTANCES_LOCK = threading.RLock()
 
 
 def sharded_engine(mesh=None, axis: str = "model") -> ShardedEngine:
@@ -343,13 +354,14 @@ def sharded_engine(mesh=None, axis: str = "model") -> ShardedEngine:
                              and mesh == default.resolve_mesh())):
         return default
     key = (mesh, axis)
-    eng = _SHARDED_INSTANCES.get(key)
-    if eng is None:
-        eng = _SHARDED_INSTANCES[key] = ShardedEngine(mesh, axis=axis)
-    _SHARDED_INSTANCES.move_to_end(key)
-    while len(_SHARDED_INSTANCES) > _SHARDED_INSTANCES_MAX:
-        _SHARDED_INSTANCES.popitem(last=False)
-    return eng
+    with _SHARDED_INSTANCES_LOCK:
+        eng = _SHARDED_INSTANCES.get(key)
+        if eng is None:
+            eng = _SHARDED_INSTANCES[key] = ShardedEngine(mesh, axis=axis)
+        _SHARDED_INSTANCES.move_to_end(key)
+        while len(_SHARDED_INSTANCES) > _SHARDED_INSTANCES_MAX:
+            _SHARDED_INSTANCES.popitem(last=False)
+        return eng
 
 
 def register_engine(engine: Engine, overwrite: bool = False) -> Engine:

@@ -82,6 +82,7 @@ import dataclasses
 import hashlib
 import os
 import pickle
+import threading
 import time
 import uuid
 import warnings
@@ -198,7 +199,16 @@ def value_fingerprint(L: CSR) -> str:
 
 @dataclasses.dataclass
 class OperatorStats:
-    """Mutable per-operator counters, updated by every solve()."""
+    """Mutable per-operator counters, updated by every solve().
+
+    Updates are atomic per event: each solve/update/fallback commits its
+    counters under one internal lock, so concurrent `solve()` calls from a
+    serving tier's worker threads never interleave a half-written record
+    (`solves` and `total_solve_ms` always describe the same set of solves,
+    which is what `repro.serving.ServiceStats` aggregation relies on).
+    Reads of individual fields stay lock-free — every field is always a
+    committed value; `to_dict()` snapshots the whole record consistently.
+    """
 
     solves: int = 0
     rhs_columns: int = 0
@@ -217,8 +227,49 @@ class OperatorStats:
     health_events: int = 0             # health violations detected
     last_health_event: str = ""        # "stage:action", e.g. "output:reference"
 
+    def __post_init__(self):
+        # a plain attribute, not a dataclass field: never serialized,
+        # never part of to_dict/equality
+        self._lock = threading.Lock()
+
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
+
+    # -- atomic mutation (one lock acquisition per event) ---------------------
+    def record_solve(self, *, ms: float, columns: int, rounds: int,
+                     residual: float) -> None:
+        with self._lock:
+            self.solves += 1
+            self.rhs_columns += columns
+            self.refine_rounds += rounds
+            self.total_solve_ms += ms
+            self.last_solve_ms = ms
+            self.last_residual = residual
+
+    def record_fallback(self, last: str) -> None:
+        with self._lock:
+            self.fallbacks += 1
+            self.last_fallback = last
+
+    def record_health_event(self, last: str = "") -> None:
+        """Count a health violation; the action suffix is committed by
+        record_health_action once the recovery path is known."""
+        with self._lock:
+            self.health_events += 1
+            if last:
+                self.last_health_event = last
+
+    def record_health_action(self, last: str) -> None:
+        with self._lock:
+            self.last_health_event = last
+
+    def record_value_update(self, *, ms: float, cache_source: str) -> None:
+        with self._lock:
+            self.value_updates += 1
+            self.last_update_ms = ms
+            self.cache_source = cache_source
 
 
 class TriangularOperator:
@@ -233,21 +284,35 @@ class TriangularOperator:
     # key stored: lets from_csr find an equal-pattern payload to derive
     # from without scanning the LRU
     _pattern_index: dict = {}
+    # one lock for cache + index: the serving tier's worker and tuner
+    # threads hit from_csr/update_values concurrently, and an OrderedDict
+    # mid-move_to_end/popitem is not safe to mutate from two threads
+    # (the disk side is already safe via atomic os.replace)
+    _cache_lock = threading.RLock()
 
     @classmethod
     def _memory_get(cls, key: str):
-        payload = cls._memory_cache.get(key)
-        if payload is not None:
-            cls._memory_cache.move_to_end(key)
-        return payload
+        with cls._cache_lock:
+            payload = cls._memory_cache.get(key)
+            if payload is not None:
+                cls._memory_cache.move_to_end(key)
+            return payload
 
     @classmethod
     def _memory_put(cls, key: str, payload: dict) -> None:
-        cls._memory_cache[key] = payload
-        cls._memory_cache.move_to_end(key)
-        cls._pattern_index[key.rsplit("-", 1)[0]] = key
-        while len(cls._memory_cache) > cls._memory_cache_max:
-            cls._memory_cache.popitem(last=False)
+        with cls._cache_lock:
+            cls._memory_cache[key] = payload
+            cls._memory_cache.move_to_end(key)
+            cls._pattern_index[key.rsplit("-", 1)[0]] = key
+            while len(cls._memory_cache) > cls._memory_cache_max:
+                cls._memory_cache.popitem(last=False)
+
+    @classmethod
+    def _memory_get_pattern(cls, pattern_key: str):
+        """Newest in-memory payload whose pattern+config segment matches
+        (one lock acquisition for index lookup + LRU touch)."""
+        with cls._cache_lock:
+            return cls._memory_get(cls._pattern_index.get(pattern_key, ""))
 
     def __init__(self, L: CSR, payload: dict, cache_source: str):
         self._L = L                 # the ORIGINAL matrix, as handed in
@@ -391,7 +456,7 @@ class TriangularOperator:
                 return _finish(payload, "disk")
             # no exact hit: an equal-pattern artifact (any values) can be
             # numerically re-bound without re-tuning or re-compiling
-            base = cls._memory_get(cls._pattern_index.get(pattern_key, ""))
+            base = cls._memory_get_pattern(pattern_key)
             if base is None:
                 base = cls._disk_load_pattern(pattern_key, cache_dir)
             if base is not None:
@@ -571,9 +636,8 @@ class TriangularOperator:
         self._sched = payload["sched"]
         self._reversed = bool(payload["reversed"])
         self._runtime = payload.setdefault("_runtime", {"compiled": {}})
-        self.stats.value_updates += 1
-        self.stats.last_update_ms = (time.perf_counter() - t0) * 1e3
-        self.stats.cache_source = source
+        self.stats.record_value_update(
+            ms=(time.perf_counter() - t0) * 1e3, cache_source=source)
         return self
 
     # -- cache plumbing -------------------------------------------------------
@@ -667,8 +731,9 @@ class TriangularOperator:
 
     @classmethod
     def clear_memory_cache(cls) -> None:
-        cls._memory_cache.clear()
-        cls._pattern_index.clear()
+        with cls._cache_lock:
+            cls._memory_cache.clear()
+            cls._pattern_index.clear()
 
     # -- solving --------------------------------------------------------------
     @property
@@ -885,9 +950,7 @@ class TriangularOperator:
             f"TriangularOperator(n={self.n}, engine={eng.name!r})", attempts)
 
     def _note_fallback(self, requested, used, attempts) -> None:
-        st = self.stats
-        st.fallbacks += 1
-        st.last_fallback = f"{requested.name}->{used.name}"
+        self.stats.record_fallback(f"{requested.name}->{used.name}")
         warned = self._runtime.setdefault("warned_fallbacks", set())
         pair = (requested.name, used.name)
         if pair not in warned:      # warn once per pair, count every event
@@ -909,7 +972,7 @@ class TriangularOperator:
         from ..core.resilience import (HealthRepairWarning,
                                        NumericalHealthError, ResilienceError)
         policy, st = guard.policy, self.stats
-        st.health_events += 1
+        st.record_health_event()
         attempted = []
         if policy.on_nonfinite == "repair":
             attempted.append("repair")
@@ -927,7 +990,7 @@ class TriangularOperator:
                     break       # corrections are poisoned too: escalate
                 resid = self._relative_residual(b, xr)
                 if resid <= policy.residual_tol:
-                    st.last_health_event = f"{stage}:repaired"
+                    st.record_health_action(f"{stage}:repaired")
                     warnings.warn(
                         f"unhealthy solve ({reason}) repaired by iterative "
                         f"refinement in {guard.where}", HealthRepairWarning,
@@ -938,13 +1001,13 @@ class TriangularOperator:
             xref = self._reference_solve(b)
             if np.isfinite(xref).all():
                 resid = self._relative_residual(b, xref)
-                st.last_health_event = f"{stage}:reference"
+                st.record_health_action(f"{stage}:reference")
                 warnings.warn(
                     f"unhealthy solve ({reason}) recovered via the host "
                     f"reference solve in {guard.where}", HealthRepairWarning,
                     stacklevel=3)
                 return xref, resid
-        st.last_health_event = f"{stage}:raised"
+        st.record_health_action(f"{stage}:raised")
         raise NumericalHealthError(reason, stage=stage, where=guard.where,
                                    fallbacks=attempted)
 
@@ -1008,9 +1071,7 @@ class TriangularOperator:
             # still serve the solve from the host reference
             if policy.on_nonfinite == "raise":
                 raise
-            st = self.stats
-            st.health_events += 1
-            st.last_health_event = "engine:reference"
+            self.stats.record_health_event("engine:reference")
             warnings.warn(
                 "every engine in the fallback chain failed; solve served "
                 f"by the host reference in {guard.where}",
@@ -1040,14 +1101,10 @@ class TriangularOperator:
             if reason is not None:
                 x, resid = self._health_recover(b, x, reason, stage, guard,
                                                 eng)
-        ms = (time.perf_counter() - t0) * 1e3
-        st = self.stats
-        st.solves += 1
-        st.rhs_columns += 1 if b.ndim == 1 else b.shape[1]
-        st.refine_rounds += rounds
-        st.total_solve_ms += ms
-        st.last_solve_ms = ms
-        st.last_residual = resid
+        self.stats.record_solve(
+            ms=(time.perf_counter() - t0) * 1e3,
+            columns=1 if b.ndim == 1 else b.shape[1],
+            rounds=rounds, residual=resid)
         return x
 
     def __repr__(self) -> str:  # pragma: no cover

@@ -212,6 +212,72 @@ def test_committed_distributed_artifact_guarantee():
 
 
 @pytest.mark.bench
+def test_serving_bench_emits_table(tmp_path):
+    """BENCH_serving.json: load sweep + cold-start anatomy (PR 8
+    tentpole).  Structure and liveness assert at smoke scale; throughput
+    and latency guarantees are held to the committed full-scale artifact
+    (test below) — never wall-clock at smoke scale."""
+    from benchmarks import serving_bench as svb
+
+    out = tmp_path / "BENCH_serving.json"
+    rec = svb.run(out_path=str(out), scales=(0.03, 0.03), widths=(1, 2),
+                  rounds=2)
+    assert out.exists()
+    assert json.loads(out.read_text()) == rec
+    for m in rec["matrices"].values():
+        assert m["hot_swap_landed"]
+        assert m["cold_start"]["first_response_ms"] > 0
+        assert m["cold_start"]["untuned_build_solve_ms"] > 0
+        assert m["cold_start"]["tuned_build_ms"] > 0
+        assert m["sequential"]["throughput_rps"] > 0
+        assert [p["width"] for p in m["load_sweep"]] == [1, 2]
+        for p in m["load_sweep"]:
+            assert p["requests"] == p["clients"] * 2
+            assert p["throughput_rps"] > 0
+            assert p["p50_ms"] <= p["p99_ms"]
+
+
+@pytest.mark.bench
+def test_run_smoke_has_serving_section():
+    """--smoke carries a serving_smoke section (wired in benchmarks.run)."""
+    import inspect
+
+    from benchmarks import run as brun
+
+    assert "serving_smoke" in inspect.getsource(brun.smoke)
+
+
+@pytest.mark.bench
+def test_committed_serving_artifact_guarantee():
+    """The committed experiments/BENCH_serving.json upholds the PR 8
+    acceptance criteria on both analogues: micro-batched throughput at
+    saturation beats the sequential baseline, cold-start first-response
+    latency tracks the untuned build (admission never waits for the
+    tuner), and the background tune hot-swapped in."""
+    from pathlib import Path
+
+    src = Path("experiments/BENCH_serving.json")
+    assert src.exists(), "run benchmarks.serving_bench to regenerate"
+    data = json.loads(src.read_text())
+    assert set(data["matrices"]) == {
+        f"lung2_like@{data['config']['scales'][0]}",
+        f"torso2_like@{data['config']['scales'][1]}"}
+    for m in data["matrices"].values():
+        assert m["batched_beats_sequential"]
+        assert m["tuning_never_blocked"]
+        assert m["hot_swap_landed"]
+        sat = m["load_sweep"][-1]
+        assert sat["throughput_rps"] > m["sequential"]["throughput_rps"]
+        assert m["saturation_speedup_vs_sequential"] > 1.0
+        cold = m["cold_start"]
+        assert cold["cold_start_le_untuned"]
+        assert cold["cold_start_not_tuner_bound"]
+        assert cold["first_response_ms"] < cold["tuned_build_ms"]
+        # batching actually happened at saturation
+        assert sat["mean_batch_width"] > 1.0
+
+
+@pytest.mark.bench
 def test_bench_schedule_fields(tmp_path):
     """BENCH_schedule.json carries the perf-trajectory fields."""
     from benchmarks.run import bench_schedule

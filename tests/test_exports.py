@@ -28,6 +28,10 @@ PACKAGES = [
     "repro.iterative",
     "repro.iterative.krylov",
     "repro.iterative.operators",
+    "repro.serving",
+    "repro.serving.batcher",
+    "repro.serving.registry",
+    "repro.serving.service",
 ]
 
 
@@ -56,6 +60,21 @@ def test_new_subsystem_surfaces():
     assert "PairReport" in portfolio.__all__
     import repro.core as core
     assert "PairReport" in core.__all__
+
+
+def test_serving_subsystem_surfaces():
+    """The PR 8 serving tier exports its full surface at package level,
+    including the typed admission/tuner failure taxonomy re-exports."""
+    import repro.serving as sv
+    from repro.core import resilience
+    assert {"MicroBatcher", "BatchKey", "SolveRequest", "Batch",
+            "OperatorRegistry", "OperatorEntry", "EntryKey",
+            "SolveService", "ServiceStats",
+            "AdmissionError", "TunerFailureWarning"} <= set(sv.__all__)
+    assert {"AdmissionError", "TunerFailureWarning"} <= set(
+        resilience.__all__)
+    from repro.core import faults
+    assert {"fail_tuner", "slow_tuner"} <= set(faults.__all__)
 
 
 def test_operator_device_surface():

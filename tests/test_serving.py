@@ -1,0 +1,359 @@
+"""Solve-service suite: correctness, lifecycle, tenancy, and chaos.
+
+Covers the serving tier end to end: deterministic pump-mode batching is
+bitwise-faithful to a direct operator solve, the mixed workload (hot
+repeats + cold admissions + update_values traffic from several tenant
+threads) matches the host oracle with zero drops, the background tuner
+hot-swaps atomically (and keeps the LATEST values when updates race the
+tune), tenant caps reject with typed AdmissionError, and the chaos
+section (pytest -m chaos) proves tuner failures degrade gracefully —
+the untuned operator keeps serving, nothing blocks, nothing is poisoned.
+"""
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.resilience import AdmissionError, TunerFailureWarning
+from repro.serving import (EntryKey, OperatorRegistry, SolveService)
+from repro.serving.server import run_workload, step_values
+from repro.solver import TriangularOperator, matrix_fingerprint
+from repro.solver.reference import solve_csr_seq
+from repro.sparse import generators
+
+
+@pytest.fixture(scope="module")
+def L():
+    return generators.lung2_like(scale=0.03)
+
+
+@pytest.fixture(scope="module")
+def L2():
+    return generators.torso2_like(scale=0.03)
+
+
+def _rhs(L, seed=0):
+    return np.random.default_rng(seed).standard_normal(L.n_rows)
+
+
+# -- deterministic pump mode --------------------------------------------------
+
+def test_pump_mode_is_bitwise_faithful_to_direct_batched_solve(L):
+    """Three requests coalesce into one (n, 3) solve whose columns match
+    an independently built operator's batched solve bitwise."""
+    b_cols = [_rhs(L, s) for s in range(3)]
+    svc = SolveService(max_width=8, max_linger_s=60.0, auto_dispatch=False,
+                       pad_widths=False, tune_mode="off", cache=False)
+    try:
+        futs = [svc.submit(b, L) for b in b_cols]
+        assert not any(f.done() for f in futs)
+        assert svc.pump() == 1                  # ONE batch for all three
+        xs = [f.result(timeout=0) for f in futs]
+    finally:
+        svc.close()
+    ref_op = TriangularOperator.from_csr(L, tune="no_rewriting", cache=False)
+    X = np.asarray(ref_op.solve(np.stack(b_cols, axis=1), max_refine=0))
+    for j, x in enumerate(xs):
+        np.testing.assert_array_equal(np.asarray(x), X[:, j])
+    snap = svc.snapshot()
+    assert snap["width_hist"] == {3: 1}
+    assert snap["flush_reasons"] == {"drain": 1}
+    assert snap["submitted"] == snap["completed"] == 3
+
+
+def test_width_padding_matches_unpadded_results(L):
+    """pad_widths bucketing (3 -> 4 zero-padded columns) changes compile
+    shapes only — solved columns agree with the unpadded service."""
+    b_cols = [_rhs(L, 10 + s) for s in range(3)]
+    out = {}
+    for pad in (False, True):
+        svc = SolveService(max_width=8, max_linger_s=60.0,
+                           auto_dispatch=False, pad_widths=pad,
+                           tune_mode="off", cache=False)
+        try:
+            futs = [svc.submit(b, L) for b in b_cols]
+            svc.pump()
+            out[pad] = [np.asarray(f.result(0)) for f in futs]
+        finally:
+            svc.close()
+    for a, b in zip(out[False], out[True]):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_value_fingerprints_never_share_a_batch(L):
+    """Same pattern + different values queue under different keys and
+    solve against their own numerics (the update_values routing)."""
+    L_new = step_values(L, 3)
+    b = _rhs(L)
+    svc = SolveService(max_width=8, max_linger_s=60.0, auto_dispatch=False,
+                       tune_mode="off", cache=False)
+    try:
+        f_old = svc.submit(b, L)
+        f_new = svc.submit(b, L_new)
+        assert svc.pump() == 2                  # distinct batches
+        x_old, x_new = f_old.result(0), f_new.result(0)
+    finally:
+        svc.close()
+    for x, mat in ((x_old, L), (x_new, L_new)):
+        ref = solve_csr_seq(mat, b.astype(np.float64))
+        err = np.max(np.abs(np.asarray(x, dtype=np.float64) - ref))
+        assert err / max(1.0, np.max(np.abs(ref))) < 5e-5
+    # one entry, re-bound in place — not two operators
+    reg = svc.registry.stats()
+    assert reg["admissions"] == 1
+    entry_snap = next(iter(reg["entries"].values()))
+    assert entry_snap["op"]["value_updates"] >= 1
+
+
+def test_batch_error_resolves_every_future_and_service_survives(L):
+    """A solve blow-up resolves the whole batch's futures with the error;
+    subsequent requests still serve."""
+    b = _rhs(L)
+    svc = SolveService(max_width=8, max_linger_s=60.0, auto_dispatch=False,
+                       tune_mode="off", cache=False,
+                       solve_kwargs={"max_refine": 0, "engine": "bogus"})
+    try:
+        fut = svc.submit(b, L)
+        svc.pump()
+        with pytest.raises(Exception):
+            fut.result(0)
+        assert svc.snapshot()["failed"] == 1
+        svc.solve_kwargs = {"max_refine": 0}    # heal; service still alive
+        f = svc.submit(b, L)
+        svc.pump()
+        f.result(0)
+        assert svc.snapshot()["completed"] == 1
+    finally:
+        svc.close()
+
+
+def test_wrong_shape_rhs_rejected_at_submit(L):
+    svc = SolveService(auto_dispatch=False, tune_mode="off", cache=False)
+    try:
+        with pytest.raises(ValueError, match="b must be"):
+            svc.submit(np.zeros(L.n_rows + 1), L)
+        assert svc.inflight() == 0              # the slot was released
+    finally:
+        svc.close()
+
+
+# -- tenancy ------------------------------------------------------------------
+
+def test_tenant_cap_rejects_with_typed_error_and_spares_others(L):
+    b = _rhs(L)
+    svc = SolveService(max_width=64, max_linger_s=60.0, auto_dispatch=False,
+                       tenant_cap=2, tune_mode="off", cache=False)
+    try:
+        svc.submit(b, L, tenant="alice")
+        svc.submit(b, L, tenant="alice")
+        with pytest.raises(AdmissionError) as ei:
+            svc.submit(b, L, tenant="alice")
+        assert ei.value.tenant == "alice"
+        assert ei.value.depth == 2 and ei.value.limit == 2
+        # bob is untouched by alice's burst
+        f = svc.submit(b, L, tenant="bob")
+        svc.pump()
+        f.result(0)
+        snap = svc.snapshot()
+        assert snap["rejected"] == 1
+        assert snap["rejected_by_tenant"] == {"alice": 1}
+        assert snap["completed"] == 3
+    finally:
+        svc.close()
+
+
+def test_completed_requests_release_tenant_slots(L):
+    b = _rhs(L)
+    svc = SolveService(max_width=64, max_linger_s=60.0, auto_dispatch=False,
+                       tenant_cap=1, tune_mode="off", cache=False)
+    try:
+        svc.submit(b, L, tenant="t")
+        svc.pump()
+        svc.submit(b, L, tenant="t")            # slot came back
+        svc.pump()
+        assert svc.snapshot()["completed"] == 2
+    finally:
+        svc.close()
+
+
+# -- registry lifecycle -------------------------------------------------------
+
+def test_cold_warming_hot_lifecycle_and_atomic_swap(L):
+    """Background tuning hot-swaps without dropping or corrupting solves."""
+    b = _rhs(L)
+    svc = SolveService(max_width=4, max_linger_s=0.001, workers=2,
+                       tune_mode="background", cache=False)
+    try:
+        xs = [svc.submit(b, L).result(60) for _ in range(3)]
+        assert svc.wait_warm(timeout=300)
+        xs.append(svc.submit(b, L).result(60))      # post-swap solve
+        reg = svc.registry.stats()
+        assert reg["hot_swaps"] == 1
+        assert dict(reg["states"]) == {"hot": 1}
+        entry_snap = next(iter(reg["entries"].values()))
+        assert entry_snap["tune_error"] == ""
+    finally:
+        svc.close()
+    ref = solve_csr_seq(L, b.astype(np.float64))
+    for x in xs:
+        err = np.max(np.abs(np.asarray(x, dtype=np.float64) - ref))
+        assert err / max(1.0, np.max(np.abs(ref))) < 5e-5
+
+
+def test_hot_swap_keeps_latest_values_when_updates_race_the_tune(L):
+    """Values updated while the tuner runs: the swapped-in tuned operator
+    must serve the NEW values, not the admission-time ones."""
+    b = _rhs(L)
+    L_new = step_values(L, 5)
+    with faults.slow_tuner(delay_s=0.4) as count:
+        svc = SolveService(max_width=4, max_linger_s=0.001, workers=2,
+                           tune_mode="background", cache=False)
+        try:
+            svc.submit(b, L).result(60)             # cold admission
+            assert svc.registry.stats()["states"].get("warming") == 1
+            x_new = svc.submit(b, L_new).result(60)  # update while warming
+            assert svc.wait_warm(timeout=300)
+            x_post = svc.submit(b, L_new).result(60)  # served post-swap
+            reg = svc.registry.stats()
+        finally:
+            svc.close()
+    assert count["calls"] == 1
+    assert reg["hot_swaps"] == 1
+    ref_new = solve_csr_seq(L_new, b.astype(np.float64))
+    for x in (x_new, x_post):
+        err = np.max(np.abs(np.asarray(x, dtype=np.float64) - ref_new))
+        assert err / max(1.0, np.max(np.abs(ref_new))) < 5e-5
+
+
+def test_sync_mode_is_hot_immediately(L):
+    reg = OperatorRegistry(tune_mode="sync", cache=False)
+    try:
+        entry, bkey, created = reg.admit(L)
+        assert created and entry.state == "hot"
+        assert entry.hot_swaps == 0             # tuned from the start
+        _, _, again = reg.admit(L)
+        assert not again and len(reg) == 1
+    finally:
+        reg.close()
+
+
+def test_registry_eviction_bounds_live_entries(L, L2):
+    reg = OperatorRegistry(tune_mode="off", cache=False, max_entries=1)
+    try:
+        reg.admit(L)
+        reg.admit(L2)
+        assert len(reg) == 1 and reg.evictions == 1
+        # the surviving entry is the newest admission
+        assert reg.get(EntryKey(pattern_fp=matrix_fingerprint(
+            L2, include_values=False))) is not None
+    finally:
+        reg.close()
+
+
+def test_orientation_is_part_of_the_entry_key(L):
+    """lower and transposed sweeps of one pattern are distinct entries."""
+    b = _rhs(L)
+    svc = SolveService(max_width=8, max_linger_s=60.0, auto_dispatch=False,
+                       tune_mode="off", cache=False)
+    try:
+        f_fwd = svc.submit(b, L)
+        f_t = svc.submit(b, L, transpose=True)
+        assert svc.pump() == 2
+        x_fwd, x_t = f_fwd.result(0), f_t.result(0)
+        assert svc.registry.stats()["admissions"] == 2
+    finally:
+        svc.close()
+    # the two sweeps solve different systems (L vs L^T)
+    assert not np.allclose(np.asarray(x_fwd), np.asarray(x_t))
+
+
+# -- mixed workload (the integration acceptance test) -------------------------
+
+@pytest.mark.slow
+def test_mixed_workload_matches_oracle_with_zero_drops(L, L2):
+    """Concurrent hot solves + cold admissions + update_values traffic
+    from three tenant threads: every response matches the float64 host
+    oracle at 1e-8 (refined solves), nothing is dropped or rejected, the
+    registry shows live pattern entries and at least one atomic hot-swap,
+    and the operator-level stats surface the value-update fast path."""
+    svc = SolveService(max_width=8, max_linger_s=0.002, workers=2,
+                       tenant_cap=64, tune_mode="background", cache=False,
+                       solve_kwargs={"max_refine": 6})
+    try:
+        result = run_workload(svc, [L, L2], requests=48, tenants=3,
+                              value_steps=2, seed=0, rel_tol=1e-8)
+        assert svc.wait_warm(timeout=600)
+    finally:
+        svc.close()
+    assert result["errors"] == []
+    assert result["checked"] == 48
+    snap = svc.snapshot()
+    assert snap["submitted"] == snap["completed"] == 48
+    assert snap["rejected"] == 0 and snap["failed"] == 0
+    assert snap["registry"]["hot_swaps"] >= 1
+    assert snap["cache_sources"]["registry"] >= 40    # warm path dominates
+    reg = svc.registry.stats()
+    assert reg["admissions"] == 2                     # one entry per pattern
+    # update_values traffic re-bound live operators at dispatch time (the
+    # entry-level counter, unlike op.stats, survives the hot-swap)
+    assert reg["value_rebinds"] >= 1
+    assert sum(snap["width_hist"].values()) == snap["batches"]
+
+
+# -- chaos: tuner faults (pytest -m chaos) ------------------------------------
+
+@pytest.mark.chaos
+def test_fail_tuner_degrades_entry_but_serving_continues(L):
+    b = _rhs(L)
+    with faults.fail_tuner() as count:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            svc = SolveService(max_width=4, max_linger_s=0.001, workers=2,
+                               tune_mode="background", cache=False)
+            try:
+                x0 = svc.submit(b, L).result(60)
+                assert svc.wait_warm(timeout=300)   # job finished (failed)
+                x1 = svc.submit(b, L).result(60)    # still serving, untuned
+                reg = svc.registry.stats()
+            finally:
+                svc.close()
+    assert count["calls"] == 1
+    assert dict(reg["states"]) == {"degraded": 1}
+    assert reg["hot_swaps"] == 0
+    assert reg["tuner_failures"] == 1
+    entry_snap = next(iter(reg["entries"].values()))
+    assert "injected tuner failure" in entry_snap["tune_error"]
+    assert entry_snap["strategy"] == "no_rewriting"
+    assert any(issubclass(w.category, TunerFailureWarning) for w in caught)
+    ref = solve_csr_seq(L, b.astype(np.float64))
+    for x in (x0, x1):
+        err = np.max(np.abs(np.asarray(x, dtype=np.float64) - ref))
+        assert err / max(1.0, np.max(np.abs(ref))) < 5e-5
+
+
+@pytest.mark.chaos
+def test_slow_tuner_never_blocks_the_request_path(L):
+    """With the tuner stalled, a burst of requests completes while the
+    entry is still warming; the swap lands afterwards anyway."""
+    b = _rhs(L)
+    with faults.slow_tuner(delay_s=0.6):
+        svc = SolveService(max_width=4, max_linger_s=0.001, workers=2,
+                           tune_mode="background", cache=False)
+        try:
+            t0 = time.perf_counter()
+            xs = [svc.submit(b, L).result(60) for _ in range(4)]
+            served_s = time.perf_counter() - t0
+            state_during = dict(svc.registry.stats()["states"])
+            assert svc.wait_warm(timeout=300)
+            reg = svc.registry.stats()
+        finally:
+            svc.close()
+    assert state_during == {"warming": 1}       # burst beat the tuner
+    assert reg["hot_swaps"] == 1 and dict(reg["states"]) == {"hot": 1}
+    ref = solve_csr_seq(L, b.astype(np.float64))
+    for x in xs:
+        err = np.max(np.abs(np.asarray(x, dtype=np.float64) - ref))
+        assert err / max(1.0, np.max(np.abs(ref))) < 5e-5
