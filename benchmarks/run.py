@@ -35,10 +35,115 @@ clobbered by reduced-scale runs.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import sys
 import time
 from pathlib import Path
+
+
+@contextlib.contextmanager
+def traced_section(name: str, trace_dir):
+    """Wrap one bench section in a fresh tracer (--trace DIR): on exit,
+    write `<dir>/<name>.trace.json` (Chrome trace-event) and
+    `<dir>/<name>.metrics.json` (default metrics-registry snapshot).
+    No-op when trace_dir is falsy — the default full/smoke runs pay
+    nothing."""
+    if not trace_dir:
+        yield
+        return
+    from repro import obs
+    d = Path(trace_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    tracer = obs.enable()
+    try:
+        yield
+    finally:
+        obs.disable()
+        obs.export.write_chrome_trace(d / f"{name}.trace.json", tracer)
+        (d / f"{name}.metrics.json").write_text(json.dumps(
+            obs.default_registry().snapshot(), indent=2, default=str) + "\n")
+
+
+def write_bench_summary(out_path="experiments/BENCH_summary.json",
+                        exp_dir="experiments"):
+    """Distill the committed BENCH_*.json artifacts into one
+    section -> headline-numbers map.  Purely derived (no measurement):
+    regenerating from the same artifacts is byte-identical, which the
+    benchmark smoke test asserts.  Returns the summary dict, or None when
+    no artifact exists."""
+    exp = Path(exp_dir)
+    summary: dict = {}
+
+    def load(name):
+        p = exp / f"BENCH_{name}.json"
+        return json.loads(p.read_text()) if p.exists() else None
+
+    rec = load("schedule")
+    if rec:
+        summary["schedule"] = {name: {
+            "n": m["n"], "steps": [m["before"]["steps"], m["after"]["steps"]],
+            "padded_flops_reduction": m["padded_flops_reduction"],
+            "build_speedup_vs_legacy": m["build_speedup_vs_legacy"],
+            "us_per_solve": [m["before"].get("us_per_solve"),
+                             m["after"].get("us_per_solve")],
+        } for name, m in rec["matrices"].items()}
+    rec = load("operator")
+    if rec:
+        summary["operator"] = {name: {
+            "pick": m["tuner"]["pick"],
+            "tuner_us": m["tuner"]["measured_us"],
+            "best_fixed_us": m.get("best_fixed_us"),
+            "worst_fixed_us": m.get("worst_fixed_us"),
+            "tuner_not_slower_than_worst":
+                m.get("tuner_not_slower_than_worst"),
+        } for name, m in rec["matrices"].items()}
+    rec = load("iterative")
+    if rec:
+        summary["iterative"] = {name: {
+            "unpreconditioned_iterations":
+                m["unpreconditioned"]["iterations"],
+            "pcg_iterations": m["tuned"]["iterations"],
+            "tuned_pick": m["tuned"]["pick"],
+            "tuned_solve_ms": m["tuned"]["solve_ms"],
+            "no_rewriting_solve_ms": m["no_rewriting"]["solve_ms"],
+            "tuned_speedup": round(
+                m["no_rewriting"]["solve_ms"] / m["tuned"]["solve_ms"], 2),
+        } for name, m in rec["matrices"].items()}
+    rec = load("refactor")
+    if rec:
+        summary["refactor"] = {name: {
+            "strategy": m["strategy"],
+            "update_speedup_vs_rebuild": m["update_speedup_vs_rebuild"],
+            "update_not_slower_than_rebuild":
+                m["update_not_slower_than_rebuild"],
+            "exact_match_fresh": m["exact_match_fresh"],
+        } for name, m in rec["matrices"].items()}
+    rec = load("distributed")
+    if rec:
+        summary["distributed"] = {name: {
+            "steps": m["steps"], "all_gather_calls": m["all_gather_calls"],
+            "transformed_not_slower": m["transformed_not_slower"],
+        } for name, m in rec["matrices"].items()}
+        summary["distributed"]["transformed_not_slower_any"] = \
+            rec["transformed_not_slower_any"]
+    rec = load("serving")
+    if rec:
+        summary["serving"] = {name: {
+            "strategy": m["strategy"],
+            "saturation_speedup_vs_sequential":
+                m["saturation_speedup_vs_sequential"],
+            "batched_beats_sequential": m["batched_beats_sequential"],
+            "hot_swap_landed": m["hot_swap_landed"],
+            "cold_start_le_untuned": m["cold_start"]["cold_start_le_untuned"],
+        } for name, m in rec["matrices"].items()}
+    if not summary:
+        return None
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(summary, indent=2, sort_keys=True) + "\n")
+    return summary
 
 
 def bench_schedule(out_path="experiments/BENCH_schedule.json",
@@ -96,7 +201,8 @@ def engine_capability_smoke(n: int = 200) -> dict:
     return out
 
 
-def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
+def smoke(out_path=None, operator_out=None, iterative_out=None,
+          trace_dir=None) -> dict:
     """Reduced-scale pass over every benchmark driver (tier-1 smoke)."""
     import benchmarks.distributed_bench as db
     import benchmarks.iterative_bench as ib
@@ -109,27 +215,38 @@ def smoke(out_path=None, operator_out=None, iterative_out=None) -> dict:
     from repro.sparse import generators
     from repro.sparse import io as sio
 
-    engines = engine_capability_smoke()
-    distributed = db.smoke_record()
+    with traced_section("engines", trace_dir):
+        engines = engine_capability_smoke()
+    with traced_section("distributed", trace_dir):
+        distributed = db.smoke_record()
     real_load = sio.load_named
     try:
         sio.load_named = lambda name: (
             generators.lung2_like(scale=0.04) if name == "lung2"
             else generators.torso2_like(scale=0.04))
-        t1.run(csv_out=None)
-        lp.run(csv_dir=None)
-        sb.run(csv_out=None, scales=(0.05, 0.05), iters=2)
+        with traced_section("table1", trace_dir):
+            t1.run(csv_out=None)
+        with traced_section("level_profiles", trace_dir):
+            lp.run(csv_dir=None)
+        with traced_section("solver_bench", trace_dir):
+            sb.run(csv_out=None, scales=(0.05, 0.05), iters=2)
     finally:
         sio.load_named = real_load
-    ob.run(out_path=operator_out, scales=(0.04, 0.04), iters=1,
-           measure_top_k=0)
-    it_rec = ib.run(out_path=iterative_out, scales=(0.02, 0.02), iters=1,
-                    maxiter=200, measure_top_k=2)
-    refactor = rb.run(out_path=None, scales=(0.04, 0.04), steps=2, iters=1)
-    serving = svb.run(out_path=None, scales=(0.03, 0.03), widths=(1, 4),
-                      rounds=3)
-    rec = bench_schedule(None, scales=(0.08, 0.06), reps=2,
-                         time_solve=False)
+    with traced_section("operator", trace_dir):
+        ob.run(out_path=operator_out, scales=(0.04, 0.04), iters=1,
+               measure_top_k=0)
+    with traced_section("iterative", trace_dir):
+        it_rec = ib.run(out_path=iterative_out, scales=(0.02, 0.02),
+                        iters=1, maxiter=200, measure_top_k=2)
+    with traced_section("refactor", trace_dir):
+        refactor = rb.run(out_path=None, scales=(0.04, 0.04), steps=2,
+                          iters=1)
+    with traced_section("serving", trace_dir):
+        serving = svb.run(out_path=None, scales=(0.03, 0.03),
+                          widths=(1, 4), rounds=3)
+    with traced_section("schedule", trace_dir):
+        rec = bench_schedule(None, scales=(0.08, 0.06), reps=2,
+                             time_solve=False)
     rec["engines"] = engines
     rec["iterative"] = it_rec
     rec["distributed_smoke"] = distributed
@@ -151,23 +268,34 @@ def main() -> None:
         import warnings
         warnings.filterwarnings("error", category=DeprecationWarning,
                                 module=r"repro\..*")
+    trace_dir = None
+    if "--trace" in sys.argv:
+        i = sys.argv.index("--trace")
+        trace_dir = (sys.argv[i + 1]
+                     if i + 1 < len(sys.argv)
+                     and not sys.argv[i + 1].startswith("--")
+                     else "experiments/traces")
     if "--smoke" in sys.argv:
         t0 = time.time()
-        rec = smoke()
+        rec = smoke(trace_dir=trace_dir)
         print(json.dumps(rec, indent=2))
         print(f"\nsmoke total {time.time() - t0:.1f}s")
         return
     from benchmarks import level_profiles, solver_bench, table1
     t0 = time.time()
     print("== Table I: strategy comparison (paper values inline) ==")
-    table1.run(csv_out="experiments/table1.csv")
+    with traced_section("table1", trace_dir):
+        table1.run(csv_out="experiments/table1.csv")
     print("\n== Fig 5/6: level-cost profiles ==")
-    level_profiles.run(csv_dir="experiments")
+    with traced_section("level_profiles", trace_dir):
+        level_profiles.run(csv_dir="experiments")
     print("\n== Solver wall-time (name,strategy,steps,levels,us,model_us,"
           "speedup,build_ms,padded,real) ==")
-    solver_bench.run(csv_out="experiments/solver_bench.csv")
+    with traced_section("solver_bench", trace_dir):
+        solver_bench.run(csv_out="experiments/solver_bench.csv")
     print("\n== Schedule compiler before/after ==")
-    rec = bench_schedule()
+    with traced_section("schedule", trace_dir):
+        rec = bench_schedule()
     for name, m in rec["matrices"].items():
         print(f"{name}: legacy_build={m['legacy_build_ms']}ms -> "
               f"after={m['after']['build_ms']}ms "
@@ -179,23 +307,30 @@ def main() -> None:
               f"(-{m['padded_flops_reduction']:.0%})")
     print("\n== Operator auto-tuner vs fixed strategies ==")
     from benchmarks import operator_bench
-    operator_bench.run(out_path="experiments/BENCH_operator.json")
+    with traced_section("operator", trace_dir):
+        operator_bench.run(out_path="experiments/BENCH_operator.json")
     print("\n== End-to-end IC(0)-PCG: tuned vs no_rewriting ==")
     from benchmarks import iterative_bench
-    iterative_bench.run(out_path="experiments/BENCH_iterative.json")
+    with traced_section("iterative", trace_dir):
+        iterative_bench.run(out_path="experiments/BENCH_iterative.json")
     print("\n== Refactorization fast path: update_values vs full "
           "rebuild per step ==")
     from benchmarks import refactor_bench
-    refactor_bench.run(out_path="experiments/BENCH_refactor.json")
+    with traced_section("refactor", trace_dir):
+        refactor_bench.run(out_path="experiments/BENCH_refactor.json")
     print("\n== Sharded scaling curve + steps-vs-all_gathers "
           "(8 forced host devices, subprocess) ==")
     from benchmarks import distributed_bench
-    distributed_bench.run(out_path="experiments/BENCH_distributed.json")
+    with traced_section("distributed", trace_dir):
+        distributed_bench.run(out_path="experiments/BENCH_distributed.json")
     print("\n== Solve service: micro-batched load sweep + cold-start "
           "anatomy ==")
     from benchmarks import serving_bench
-    serving_bench.run(out_path="experiments/BENCH_serving.json")
+    with traced_section("serving", trace_dir):
+        serving_bench.run(out_path="experiments/BENCH_serving.json")
     _roofline_summary()
+    write_bench_summary()
+    print("wrote experiments/BENCH_summary.json")
     print(f"\ntotal {time.time() - t0:.1f}s")
 
 

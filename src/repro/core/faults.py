@@ -35,6 +35,7 @@ __all__ = [
     "wrong_schedule_values", "corrupt_values_payload", "pattern_drift",
     "corrupt_cache_entries", "fail_engine_compile",
     "engine_unavailable", "lose_mesh", "fail_tuner", "slow_tuner",
+    "slow_step",
 ]
 
 
@@ -257,6 +258,21 @@ def slow_tuner(delay_s: float = 0.5):
 
     with _patched(StrategyPortfolio, "tune", slow):
         yield count
+
+
+# -- profiler faults ----------------------------------------------------------
+
+
+def slow_step(step_idx: int, seconds: float):
+    """Every TIMED (non-warmup) pass of the `repro.obs.profile` schedule
+    profiler inside the context stalls for `seconds` before executing step
+    `step_idx` — the one-slow-step fault (a preempted core, a collective
+    straggler) the per-step histogram must localize: the chaos test
+    asserts `argmax(step_ms) == step_idx` and that the stall is visible
+    inside the profile span's trace."""
+    from ..obs import profile as _prof
+    return _patched(_prof, "_STEP_FAULT",
+                    (int(step_idx), float(seconds)))
 
 
 # -- mesh faults --------------------------------------------------------------

@@ -32,6 +32,8 @@ import dataclasses
 
 import numpy as np
 
+from ..obs import trace as _obs
+from ..obs.metrics import default_registry as _default_registry
 from ..sparse.csr import CSR
 from .strategies import (AvgLevelCost, ConstrainedAvgLevelCost,
                          CriticalPathRewrite, ManualEveryK, NoRewrite,
@@ -105,6 +107,56 @@ class CostModel:
         return dataclasses.replace(
             base if base is not None else cls(),
             collective_latency_us=collective_latency_us)
+
+    def calibrate(self, profile) -> "CostModel":
+        """Refit the per-step constants from a measured `ScheduleProfile`
+        (repro.obs.profile) and return the calibrated model.
+
+        Least-squares of per-step time against per-step padded FLOPs and
+        bytes, intercept -> `step_overhead_us`.  Two profiler realities
+        are handled explicitly:
+
+        * when the profile carries a collective split (sharded engines),
+          the fit runs on COMPUTE time and `collective_latency_us` is set
+          to the median per-step collective time — the objective the
+          sharded ranking charges per step;
+        * width-bucketed schedules often have (near-)constant per-step
+          FLOPs/bytes, a degenerate design matrix.  Constant columns are
+          excluded from the fit, their charge (at the model's existing
+          rate) is subtracted out of the intercept, and the residual
+          becomes the overhead — so `predict()` with the calibrated model
+          still reproduces the fitted per-step time.
+        """
+        t_us = np.asarray(profile.step_ms, dtype=float) * 1e3
+        if t_us.size == 0:
+            return self
+        updates: dict = {}
+        coll = getattr(profile, "collective_ms", None)
+        if coll is not None:
+            coll_us = np.asarray(coll, dtype=float) * 1e3
+            t_us = np.maximum(t_us - coll_us, 0.0)
+            updates["collective_latency_us"] = float(np.median(coll_us))
+        feats = [
+            ("us_per_padded_flop",
+             np.asarray(profile.step_padded_flops, dtype=float)),
+            ("us_per_byte", np.asarray(profile.step_bytes, dtype=float)),
+        ]
+        included, excluded = [], []
+        for name, col in feats:
+            scale = max(1.0, float(np.abs(col).mean()))
+            (included if float(col.std()) > 1e-9 * scale
+             else excluded).append((name, col))
+        design = np.column_stack(
+            [np.ones_like(t_us)] + [col for _, col in included])
+        coef, *_ = np.linalg.lstsq(design, t_us, rcond=None)
+        coef = np.maximum(coef, 0.0)
+        overhead = float(coef[0])
+        for (name, _), v in zip(included, coef[1:]):
+            updates[name] = float(v)
+        for name, col in excluded:
+            overhead -= getattr(self, name) * float(col.mean())
+        updates["step_overhead_us"] = max(0.0, overhead)
+        return dataclasses.replace(self, **updates)
 
     def predict(self, sched, metrics: TransformMetrics) -> dict:
         """Cost breakdown (us) for one compiled schedule + its transform."""
@@ -334,6 +386,33 @@ class StrategyPortfolio:
         self.engine = engine
 
     def tune(self, L: CSR) -> PortfolioReport:
+        with _obs.span("portfolio.tune", n=L.n_rows,
+                       candidates=len(self.candidates),
+                       measure_top_k=self.measure_top_k) as sp:
+            report = self._tune(L)
+            sp.set(best=report.best.label, tune_ms=report.tune_ms)
+        reg = _default_registry()
+        with reg.lock:
+            reg.counter("portfolio_tunes", "portfolio tuning runs").inc()
+            failures = reg.counter(
+                "portfolio_candidate_failures",
+                "candidates whose transform/compile raised")
+            notes = reg.counter(
+                "portfolio_measure_notes",
+                "measured-mode anomalies by kind "
+                "(timeout|outliers|measure_failed)")
+            for c in report.candidates:
+                if c.error is not None:
+                    failures.inc()
+                if c.measure_note:
+                    kind = ("timeout" if c.measure_note.startswith("timeout")
+                            else "measure_failed"
+                            if c.measure_note.startswith("measure failed")
+                            else "outliers")
+                    notes.inc(kind=kind)
+        return report
+
+    def _tune(self, L: CSR) -> PortfolioReport:
         import time
         from ..solver.schedule import schedule_for_transformed
         t0 = time.perf_counter()

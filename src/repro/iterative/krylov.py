@@ -157,6 +157,40 @@ def _attach_stats(result: SolveResult, preconditioner) -> SolveResult:
     return result
 
 
+# per-driver residual events are capped: a 10k-iteration solve must not
+# flood the trace, so the history is thinned to evenly spaced samples
+_TRACE_EVENT_CAP = 64
+
+
+def _trace_iterations(result: SolveResult, driver: str) -> None:
+    """Host-path per-iteration `krylov.residual` events from the recorded
+    history (first column when batched).  Inside jit x is a tracer and the
+    history is unreadable — nothing is emitted, same guard as
+    `_attach_stats`."""
+    from ..obs import trace as _obs
+    if not _obs.enabled():
+        return
+    import jax
+    if isinstance(result.x, jax.core.Tracer):
+        return
+    hist = np.asarray(result.residual_norms, dtype=float)
+    col = hist if hist.ndim == 1 else hist[:, 0]
+    last = int(np.max(np.asarray(result.iterations)))
+    idx = np.arange(min(last + 1, col.shape[0]))
+    if idx.size > _TRACE_EVENT_CAP:
+        idx = np.unique(np.linspace(0, idx[-1],
+                                    _TRACE_EVENT_CAP).astype(int))
+    for i in idx:
+        if np.isfinite(col[i]):
+            _obs.event("krylov.residual", driver=driver, iteration=int(i),
+                       residual=float(col[i]))
+
+
+def _finish(result: SolveResult, preconditioner, driver: str) -> SolveResult:
+    _trace_iterations(result, driver)
+    return _attach_stats(result, preconditioner)
+
+
 def cg(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
        atol: float = 0.0, maxiter: int | None = None) -> SolveResult:
     """Preconditioned conjugate gradient for SPD systems.
@@ -217,9 +251,10 @@ def cg(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
     status = jnp.where(done, STATUS_CONVERGED,
                        jnp.where(brk, STATUS_BREAKDOWN,
                                  STATUS_MAXITER)).astype(jnp.int32)
-    return _attach_stats(
+    return _finish(
         SolveResult(x=x, converged=done, iterations=iters,
-                    residual_norms=hist, status=status), preconditioner)
+                    residual_norms=hist, status=status), preconditioner,
+        "cg")
 
 
 def bicgstab(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
@@ -309,9 +344,10 @@ def bicgstab(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
     status = jnp.where(done, STATUS_CONVERGED,
                        jnp.where(brk, STATUS_BREAKDOWN,
                                  STATUS_MAXITER)).astype(jnp.int32)
-    return _attach_stats(
+    return _finish(
         SolveResult(x=x, converged=done, iterations=iters,
-                    residual_norms=hist, status=status), preconditioner)
+                    residual_norms=hist, status=status), preconditioner,
+        "bicgstab")
 
 
 def gmres(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
@@ -464,6 +500,7 @@ def gmres(matvec, b, *, preconditioner=None, x0=None, tol: float = 1e-8,
     status = jnp.where(done, STATUS_CONVERGED,
                        jnp.where(brk, STATUS_BREAKDOWN,
                                  STATUS_MAXITER)).astype(jnp.int32)
-    return _attach_stats(
+    return _finish(
         SolveResult(x=x, converged=done, iterations=iters,
-                    residual_norms=hist, status=status), preconditioner)
+                    residual_norms=hist, status=status), preconditioner,
+        "gmres")

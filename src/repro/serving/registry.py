@@ -41,6 +41,8 @@ import warnings
 import numpy as np
 
 from ..core.resilience import TunerFailureWarning
+from ..obs import trace as _obs
+from ..obs.metrics import MetricsRegistry
 from ..solver.operator import (TriangularOperator, matrix_fingerprint,
                                value_fingerprint)
 from .batcher import BatchKey
@@ -181,10 +183,29 @@ class OperatorRegistry:
         self._tuner: concurrent.futures.ThreadPoolExecutor | None = None
         self._tune_jobs: dict = {}        # EntryKey -> Future
         self._closed = False
-        # registry-wide counters (service stats merge these)
-        self.admissions = 0
-        self.evictions = 0
-        self.tuner_failures = 0
+        # registry-wide lifecycle counters live in a metrics registry so
+        # stats() and the Prometheus page read the same ledger; the
+        # hot_swaps/value_rebinds/states aggregates stay entry-derived at
+        # read time (no dual bookkeeping)
+        self.metrics = MetricsRegistry(prefix="repro_registry")
+        self._admissions = self.metrics.counter(
+            "admissions", "first-seen patterns admitted")
+        self._evictions = self.metrics.counter(
+            "evictions", "idle entries evicted over max_entries")
+        self._tuner_failures = self.metrics.counter(
+            "tuner_failures", "background tunes that raised (degraded)")
+
+    @property
+    def admissions(self) -> int:
+        return self._admissions.value()
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value()
+
+    @property
+    def tuner_failures(self) -> int:
+        return self._tuner_failures.value()
 
     # -- admission ------------------------------------------------------------
     def admit(self, L, *, dtype="float32", side: str = "lower",
@@ -198,43 +219,46 @@ class OperatorRegistry:
         touches nothing else.
         """
         dtype = np.dtype(dtype).name
-        ekey = EntryKey(pattern_fp=matrix_fingerprint(L, include_values=False),
-                        dtype=dtype, side=side, transpose=bool(transpose))
-        value_fp = value_fingerprint(L)
-        with self._lock:
-            if self._closed:
-                raise RuntimeError("registry is closed")
-            entry = self._entries.get(ekey)
-            created = entry is None
+        with _obs.span("registry.admit", dtype=dtype) as asp:
+            ekey = EntryKey(
+                pattern_fp=matrix_fingerprint(L, include_values=False),
+                dtype=dtype, side=side, transpose=bool(transpose))
+            value_fp = value_fingerprint(L)
+            with self._lock:
+                if self._closed:
+                    raise RuntimeError("registry is closed")
+                entry = self._entries.get(ekey)
+                created = entry is None
+                if created:
+                    entry = self._entries[ekey] = OperatorEntry(ekey)
+                    self._admissions.inc()
+                    # hold the entry lock BEFORE it escapes the registry
+                    # lock: concurrent admitters / dispatchers block on
+                    # entry.lock until the untuned operator exists, instead
+                    # of observing a published-but-empty entry
+                    entry.lock.acquire()
+                self._entries.move_to_end(ekey)
+            asp.set(created=created, pattern=ekey.pattern_fp[:8])
             if created:
-                entry = self._entries[ekey] = OperatorEntry(ekey)
-                self.admissions += 1
-                # hold the entry lock BEFORE it escapes the registry lock:
-                # concurrent admitters / dispatchers block on entry.lock
-                # until the untuned operator exists, instead of observing a
-                # published-but-empty entry
-                entry.lock.acquire()
-            self._entries.move_to_end(ekey)
-        if created:
-            try:
+                try:
+                    entry.note_values(L, value_fp)
+                    entry.admitted_at = time.perf_counter()
+                    if self.tune_mode == "sync":
+                        entry.op = self._build(L, self._tune, ekey)
+                        entry.state = "hot"
+                    else:
+                        entry.op = self._build(L, self._untuned, ekey)
+                        if self.tune_mode == "background":
+                            entry.state = "warming"
+                            self._schedule_tune(entry, L)
+                        # "off": stays cold — batching-tier isolation
+                    entry.bound_fp = value_fp
+                finally:
+                    entry.lock.release()
+                self._evict_over_cap()
+            else:
                 entry.note_values(L, value_fp)
-                entry.admitted_at = time.perf_counter()
-                if self.tune_mode == "sync":
-                    entry.op = self._build(L, self._tune, ekey)
-                    entry.state = "hot"
-                else:
-                    entry.op = self._build(L, self._untuned, ekey)
-                    if self.tune_mode == "background":
-                        entry.state = "warming"
-                        self._schedule_tune(entry, L)
-                    # "off": stays cold — batching-tier isolation
-                entry.bound_fp = value_fp
-            finally:
-                entry.lock.release()
-            self._evict_over_cap()
-        else:
-            entry.note_values(L, value_fp)
-        return entry, entry.batch_key(value_fp), created
+            return entry, entry.batch_key(value_fp), created
 
     def _build(self, L, tune, ekey: EntryKey) -> TriangularOperator:
         return TriangularOperator.from_csr(
@@ -251,33 +275,42 @@ class OperatorRegistry:
                 self._tune_and_swap, entry, L)
 
     def _tune_and_swap(self, entry: OperatorEntry, L) -> None:
-        try:
-            # the slow part runs UNLOCKED: requests keep flowing through
-            # the untuned operator while the portfolio searches
-            tuned = self._build(L, self._tune, entry.ekey)
-        except Exception as exc:     # noqa: BLE001 - any tuner blow-up
+        pat = entry.ekey.pattern_fp[:8]
+        with _obs.span("registry.tune", pattern=pat) as tsp:
+            try:
+                # the slow part runs UNLOCKED: requests keep flowing
+                # through the untuned operator while the portfolio searches
+                tuned = self._build(L, self._tune, entry.ekey)
+            except Exception as exc:     # noqa: BLE001 - any tuner blow-up
+                with entry.lock:
+                    entry.state = "degraded"
+                    entry.tune_error = f"{type(exc).__name__}: {exc}"
+                self._tuner_failures.inc()
+                tsp.set(outcome="degraded")
+                _obs.event("registry.tune_failed", pattern=pat,
+                           error=type(exc).__name__)
+                warnings.warn(
+                    f"background tuning failed for {pat}; serving "
+                    f"continues on the untuned operator ({exc})",
+                    TunerFailureWarning, stacklevel=2)
+                return
             with entry.lock:
-                entry.state = "degraded"
-                entry.tune_error = f"{type(exc).__name__}: {exc}"
-            with self._lock:
-                self.tuner_failures += 1
-            warnings.warn(
-                f"background tuning failed for {entry.ekey.pattern_fp[:8]}; "
-                f"serving continues on the untuned operator ({exc})",
-                TunerFailureWarning, stacklevel=2)
-            return
-        with entry.lock:
-            if entry.bound_fp and entry.bound_fp != value_fingerprint(tuned._L):
-                # values drifted while tuning ran: re-bind the tuned
-                # operator to the entry's CURRENT payload before it is
-                # visible to anyone — the swap must not roll numerics back
-                tuned.update_values(entry._values[entry.bound_fp])
-                entry.value_rebinds += 1
-            entry.untuned_solves = entry.op.stats.solves \
-                if entry.op is not None else 0
-            entry.op = tuned
-            entry.state = "hot"
-            entry.hot_swaps += 1
+                if entry.bound_fp and \
+                        entry.bound_fp != value_fingerprint(tuned._L):
+                    # values drifted while tuning ran: re-bind the tuned
+                    # operator to the entry's CURRENT payload before it is
+                    # visible to anyone — the swap must not roll numerics
+                    # back
+                    tuned.update_values(entry._values[entry.bound_fp])
+                    entry.value_rebinds += 1
+                entry.untuned_solves = entry.op.stats.solves \
+                    if entry.op is not None else 0
+                entry.op = tuned
+                entry.state = "hot"
+                entry.hot_swaps += 1
+            tsp.set(outcome="hot_swap")
+            _obs.event("registry.hot_swap", pattern=pat,
+                       strategy=getattr(tuned, "strategy", None))
 
     def wait_warm(self, timeout: float | None = None) -> bool:
         """Block until every scheduled tune has finished (swapped or
@@ -300,12 +333,17 @@ class OperatorRegistry:
                     break   # never evict mid-tune; retry on next admission
                 del self._entries[victim_key]
                 self._tune_jobs.pop(victim_key, None)
-                self.evictions += 1
+                self._evictions.inc()
 
     # -- lookup / stats -------------------------------------------------------
     def get(self, ekey: EntryKey) -> OperatorEntry | None:
         with self._lock:
             return self._entries.get(ekey)
+
+    def entries(self) -> list:
+        """Live (EntryKey, OperatorEntry) pairs (scrape/introspection)."""
+        with self._lock:
+            return list(self._entries.items())
 
     def __len__(self) -> int:
         with self._lock:

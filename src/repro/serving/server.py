@@ -109,10 +109,18 @@ def main(argv=None) -> int:
                     help="skip the per-request oracle check")
     ap.add_argument("--smoke", action="store_true",
                     help="small fast preset (CI)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing and write a Chrome trace-event "
+                         "JSON of the whole run to PATH")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the final Prometheus text page to PATH")
     args = ap.parse_args(argv)
     if args.smoke:
         args.requests = min(args.requests, 120)
         args.scale = min(args.scale, 0.03)
+
+    from .. import obs
+    tracer = obs.enable() if args.trace_out else None
 
     matrices = build_matrices(args.scale, args.patterns, args.seed)
     svc = SolveService(max_width=args.max_width,
@@ -124,9 +132,16 @@ def main(argv=None) -> int:
                               value_steps=args.value_steps, seed=args.seed,
                               check=not args.no_check)
         svc.wait_warm(timeout=300)
+        prom = svc.prometheus_text() if args.prom_out else None
     finally:
         svc.close()             # drains workers: the snapshot below is final
     snap = svc.snapshot()
+    if tracer is not None:
+        obs.disable()
+        obs.export.write_chrome_trace(args.trace_out, tracer)
+    if prom is not None:
+        with open(args.prom_out, "w") as fh:
+            fh.write(prom)
 
     report = {"requests": args.requests, "tenants": args.tenants,
               "patterns": len(matrices), "checked": result["checked"],

@@ -41,6 +41,8 @@ import time
 import numpy as np
 
 from ..core.resilience import AdmissionError
+from ..obs import trace as _obs
+from ..obs.metrics import MetricsRegistry, nearest_rank_percentile
 from .batcher import MicroBatcher, SolveRequest
 from .registry import EntryKey, OperatorRegistry
 
@@ -50,67 +52,137 @@ _RESERVOIR = 100_000     # latency samples retained per series
 
 
 def _percentile(samples, q: float) -> float:
-    """Nearest-rank percentile of a list (NaN when empty)."""
-    if not samples:
-        return float("nan")
-    s = sorted(samples)
-    rank = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
-    return float(s[rank])
+    """Nearest-rank percentile of a list (NaN when empty) — the one
+    formula, now owned by repro.obs.metrics."""
+    return nearest_rank_percentile(samples, q)
 
 
 class ServiceStats:
-    """Thread-safe counters + latency reservoirs for one SolveService."""
+    """The service's stats plane: a VIEW over a `repro.obs` metrics
+    registry (prefix "repro_service") — counters, labeled counters for
+    the width/flush/source breakdowns, and two latency histograms whose
+    bounded reservoirs feed the nearest-rank percentiles.  `snapshot()`
+    and the Prometheus exporter read the SAME instruments; there is no
+    second ledger (docs/observability.md).  Multi-instrument events
+    commit atomically under the registry's one shared lock."""
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.submitted = 0
-        self.completed = 0
-        self.rejected = 0            # AdmissionError (tenant cap)
-        self.failed = 0              # requests resolved with an exception
-        self.batches = 0
-        self.batch_errors = 0
-        self.width_hist = collections.Counter()     # batch width -> count
-        self.flush_reasons = collections.Counter()  # width | linger | drain
-        self.cache_sources = collections.Counter()  # registry|built|memory|...
-        self.rejected_by_tenant = collections.Counter()
-        self.queue_ms: list = []     # enqueue -> dispatch, per request
-        self.solve_ms: list = []     # dispatch -> solved, per batch
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(prefix="repro_service")
+        r = self.registry
+        self._lock = r.lock
+        self._submitted = r.counter("submitted", "requests admitted")
+        self._completed = r.counter("completed",
+                                    "requests resolved with a solution")
+        self._rejected = r.counter("rejected",
+                                   "requests rejected by the tenant cap")
+        self._failed = r.counter("failed",
+                                 "requests resolved with an exception")
+        self._batches = r.counter("batches", "batches executed")
+        self._batch_errors = r.counter("batch_errors", "batches that raised")
+        self._width_hist = r.counter("batch_width", "batches by width")
+        self._flush_reasons = r.counter(
+            "batch_flush", "batches by flush reason (width|linger|drain)")
+        self._cache_sources = r.counter(
+            "cache_source", "admissions by operator cache source")
+        self._rejected_by_tenant = r.counter("rejected_tenant",
+                                             "rejections per tenant")
+        self._queue_ms = r.histogram(
+            "queue_ms", "enqueue->dispatch wait per request (ms)",
+            reservoir=_RESERVOIR)
+        self._solve_ms = r.histogram(
+            "solve_ms", "dispatch->solved per batch (ms)",
+            reservoir=_RESERVOIR)
+
+    # -- attribute views (the pre-registry public surface) --------------------
+    @property
+    def submitted(self) -> int:
+        return self._submitted.value()
+
+    @property
+    def completed(self) -> int:
+        return self._completed.value()
+
+    @property
+    def rejected(self) -> int:
+        return self._rejected.value()
+
+    @property
+    def failed(self) -> int:
+        return self._failed.value()
+
+    @property
+    def batches(self) -> int:
+        return self._batches.value()
+
+    @property
+    def batch_errors(self) -> int:
+        return self._batch_errors.value()
+
+    @staticmethod
+    def _labeled(counter, label, cast=lambda v: v):
+        return collections.Counter(
+            {cast(dict(k)[label]): v for k, v in counter.series().items()})
+
+    @property
+    def width_hist(self):               # batch width -> count
+        return self._labeled(self._width_hist, "width", int)
+
+    @property
+    def flush_reasons(self):            # width | linger | drain
+        return self._labeled(self._flush_reasons, "reason")
+
+    @property
+    def cache_sources(self):            # registry|built|memory|...
+        return self._labeled(self._cache_sources, "source")
+
+    @property
+    def rejected_by_tenant(self):
+        return self._labeled(self._rejected_by_tenant, "tenant")
+
+    @property
+    def queue_ms(self) -> list:         # enqueue -> dispatch, per request
+        return self._queue_ms.samples()
+
+    @property
+    def solve_ms(self) -> list:         # dispatch -> solved, per batch
+        return self._solve_ms.samples()
 
     # -- recording ------------------------------------------------------------
     def record_submit(self, source: str) -> None:
         with self._lock:
-            self.submitted += 1
-            self.cache_sources[source] += 1
+            self._submitted.inc()
+            self._cache_sources.inc(source=source)
 
     def record_reject(self, tenant: str) -> None:
         with self._lock:
-            self.rejected += 1
-            self.rejected_by_tenant[tenant] += 1
+            self._rejected.inc()
+            self._rejected_by_tenant.inc(tenant=tenant)
 
     def record_batch(self, batch, queue_ms, solve_ms: float) -> None:
         with self._lock:
-            self.batches += 1
-            self.completed += batch.width
-            self.width_hist[batch.width] += 1
-            self.flush_reasons[batch.reason] += 1
-            if len(self.queue_ms) < _RESERVOIR:
-                self.queue_ms.extend(queue_ms)
-            if len(self.solve_ms) < _RESERVOIR:
-                self.solve_ms.append(solve_ms)
+            self._batches.inc()
+            self._completed.inc(batch.width)
+            self._width_hist.inc(width=int(batch.width))
+            self._flush_reasons.inc(reason=batch.reason)
+            for v in queue_ms:
+                self._queue_ms.observe(v)
+            self._solve_ms.observe(solve_ms)
 
     def record_batch_error(self, batch) -> None:
         with self._lock:
-            self.batches += 1
-            self.batch_errors += 1
-            self.failed += batch.width
-            self.width_hist[batch.width] += 1
-            self.flush_reasons[batch.reason] += 1
+            self._batches.inc()
+            self._batch_errors.inc()
+            self._failed.inc(batch.width)
+            self._width_hist.inc(width=int(batch.width))
+            self._flush_reasons.inc(reason=batch.reason)
 
     # -- reading --------------------------------------------------------------
     def mean_width(self) -> float:
         with self._lock:
-            n = sum(self.width_hist.values())
-            return (sum(w * c for w, c in self.width_hist.items()) / n
+            hist = self.width_hist
+            n = sum(hist.values())
+            return (sum(w * c for w, c in hist.items()) / n
                     if n else float("nan"))
 
     def snapshot(self, registry: OperatorRegistry | None = None) -> dict:
@@ -123,10 +195,10 @@ class ServiceStats:
                 "flush_reasons": dict(self.flush_reasons),
                 "cache_sources": dict(self.cache_sources),
                 "rejected_by_tenant": dict(self.rejected_by_tenant),
-                "queue_ms": {"p50": _percentile(self.queue_ms, 50),
-                             "p99": _percentile(self.queue_ms, 99)},
-                "solve_ms": {"p50": _percentile(self.solve_ms, 50),
-                             "p99": _percentile(self.solve_ms, 99)},
+                "queue_ms": {"p50": self._queue_ms.percentile(50),
+                             "p99": self._queue_ms.percentile(99)},
+                "solve_ms": {"p50": self._solve_ms.percentile(50),
+                             "p99": self._solve_ms.percentile(99)},
             }
         n = sum(snap["width_hist"].values())
         snap["mean_width"] = (sum(w * c for w, c in snap["width_hist"]
@@ -213,45 +285,48 @@ class SolveService:
         already has `tenant_cap` requests in flight."""
         if self._closed:
             raise RuntimeError("service is closed")
-        with self._tenant_lock:
-            depth = self._inflight[tenant]
-            if self.tenant_cap is not None and depth >= self.tenant_cap:
-                self.stats.record_reject(tenant)
-                raise AdmissionError("tenant queue depth cap reached",
-                                     tenant=tenant, depth=depth,
-                                     limit=self.tenant_cap)
-            self._inflight[tenant] += 1
-        try:
-            entry, bkey, created = self.registry.admit(
-                matrix, dtype=dtype, side=side, transpose=transpose)
-        except BaseException:
-            self._release(tenant)
-            raise
-        b = np.asarray(b)
-        if b.ndim != 1 or b.shape[0] != matrix.n_rows:
-            # reject HERE: a wrong-shape column must fail its own request,
-            # never reach stack() and poison a shared batch
-            self._release(tenant)
-            raise ValueError(
-                f"b must be ({matrix.n_rows},), got {b.shape}")
-        # cold admissions surface the operator cache's source (built /
-        # memory / disk / pattern); warm ones hit the live registry
-        self.stats.record_submit(
-            entry.op.stats.cache_source if created else "registry")
-        fut = concurrent.futures.Future()
-        fut.add_done_callback(lambda _f, t=tenant: self._release(t))
-        req = SolveRequest(key=bkey, b=b, tenant=tenant, future=fut)
-        with self._cond:
-            if self._closed:    # closed between the early check and here:
-                fut.cancel()    # cancellation releases the tenant slot
-                raise RuntimeError("service is closed")
-            batch = self._batcher.enqueue(req, self._clock())
-            if batch is not None and not self._auto:
-                self._pending.append(batch)
-            self._cond.notify()
-        if batch is not None and self._auto:
-            self._pool.submit(self._run_batch, batch)
-        return fut
+        with _obs.span("serving.submit", tenant=tenant) as ssp:
+            with self._tenant_lock:
+                depth = self._inflight[tenant]
+                if self.tenant_cap is not None and depth >= self.tenant_cap:
+                    self.stats.record_reject(tenant)
+                    raise AdmissionError("tenant queue depth cap reached",
+                                         tenant=tenant, depth=depth,
+                                         limit=self.tenant_cap)
+                self._inflight[tenant] += 1
+            try:
+                entry, bkey, created = self.registry.admit(
+                    matrix, dtype=dtype, side=side, transpose=transpose)
+            except BaseException:
+                self._release(tenant)
+                raise
+            b = np.asarray(b)
+            if b.ndim != 1 or b.shape[0] != matrix.n_rows:
+                # reject HERE: a wrong-shape column must fail its own
+                # request, never reach stack() and poison a shared batch
+                self._release(tenant)
+                raise ValueError(
+                    f"b must be ({matrix.n_rows},), got {b.shape}")
+            # cold admissions surface the operator cache's source (built /
+            # memory / disk / pattern); warm ones hit the live registry
+            source = entry.op.stats.cache_source if created else "registry"
+            self.stats.record_submit(source)
+            ssp.set(source=source, created=created,
+                    pattern=bkey.pattern_fp[:8])
+            fut = concurrent.futures.Future()
+            fut.add_done_callback(lambda _f, t=tenant: self._release(t))
+            req = SolveRequest(key=bkey, b=b, tenant=tenant, future=fut)
+            with self._cond:
+                if self._closed:  # closed between the early check and here:
+                    fut.cancel()  # cancellation releases the tenant slot
+                    raise RuntimeError("service is closed")
+                batch = self._batcher.enqueue(req, self._clock())
+                if batch is not None and not self._auto:
+                    self._pending.append(batch)
+                self._cond.notify()
+            if batch is not None and self._auto:
+                self._pool.submit(self._run_batch, batch)
+            return fut
 
     def solve(self, b, matrix, **kwargs) -> np.ndarray:
         """Synchronous sugar: submit and wait."""
@@ -301,44 +376,74 @@ class SolveService:
     def _run_batch(self, batch) -> None:
         t0 = self._clock()
         key = batch.key
-        try:
-            entry = self.registry.get(EntryKey(
-                pattern_fp=key.pattern_fp, dtype=key.dtype, side=key.side,
-                transpose=key.transpose))
-            if entry is None:
-                raise RuntimeError(
-                    f"no registry entry for pattern {key.pattern_fp[:8]} "
-                    "(evicted mid-flight?)")
-            B = batch.stack()
-            if self.pad_widths and B.ndim == 2:
-                bucket = 1 << (B.shape[1] - 1).bit_length()
-                if bucket > B.shape[1]:
-                    B = np.concatenate(
-                        [B, np.zeros((B.shape[0], bucket - B.shape[1]),
-                                     dtype=B.dtype)], axis=1)
-            # one lock span covers re-bind + solve: a concurrent value
-            # update or hot-swap lands before or after this batch, never
-            # inside it
-            with entry.lock:
-                op = entry.ensure_values(key.value_fp)
-                x = op.solve(B, **self.solve_kwargs)
-        except BaseException as exc:   # noqa: BLE001 - resolve the futures
+        with _obs.span("serving.batch", width=batch.width,
+                       reason=batch.reason,
+                       pattern=key.pattern_fp[:8]) as bsp:
+            # queue waits happened before this span on other threads;
+            # record them retroactively as children (both ends measured on
+            # the tracer's default perf_counter timebase)
             for r in batch.requests:
-                if r.future is not None and not r.future.done():
-                    r.future.set_exception(exc)
-            self.stats.record_batch_error(batch)
-            return
-        t1 = self._clock()
-        for j, r in enumerate(batch.requests):
-            if r.future is not None:
-                r.future.set_result(np.array(batch.column(x, j)))
-        self.stats.record_batch(
-            batch, [(t0 - r.t_enqueue) * 1e3 for r in batch.requests],
-            (t1 - t0) * 1e3)
+                _obs.record_span("serving.queue", r.t_enqueue, t0,
+                                 parent=bsp, tenant=r.tenant)
+            try:
+                entry = self.registry.get(EntryKey(
+                    pattern_fp=key.pattern_fp, dtype=key.dtype,
+                    side=key.side, transpose=key.transpose))
+                if entry is None:
+                    raise RuntimeError(
+                        f"no registry entry for pattern "
+                        f"{key.pattern_fp[:8]} (evicted mid-flight?)")
+                B = batch.stack()
+                if self.pad_widths and B.ndim == 2:
+                    bucket = 1 << (B.shape[1] - 1).bit_length()
+                    if bucket > B.shape[1]:
+                        B = np.concatenate(
+                            [B, np.zeros((B.shape[0], bucket - B.shape[1]),
+                                         dtype=B.dtype)], axis=1)
+                        bsp.set(padded_width=bucket)
+                # one lock span covers re-bind + solve: a concurrent value
+                # update or hot-swap lands before or after this batch,
+                # never inside it
+                with entry.lock:
+                    op = entry.ensure_values(key.value_fp)
+                    with _obs.span("serving.solve", columns=B.shape[-1]
+                                   if B.ndim == 2 else 1):
+                        x = op.solve(B, **self.solve_kwargs)
+            except BaseException as exc:  # noqa: BLE001 - resolve futures
+                for r in batch.requests:
+                    if r.future is not None and not r.future.done():
+                        r.future.set_exception(exc)
+                self.stats.record_batch_error(batch)
+                return
+            t1 = self._clock()
+            for j, r in enumerate(batch.requests):
+                if r.future is not None:
+                    r.future.set_result(np.array(batch.column(x, j)))
+            self.stats.record_batch(
+                batch, [(t0 - r.t_enqueue) * 1e3 for r in batch.requests],
+                (t1 - t0) * 1e3)
+            bsp.set(solve_ms=(t1 - t0) * 1e3)
 
     # -- observability --------------------------------------------------------
     def snapshot(self) -> dict:
         return self.stats.snapshot(self.registry)
+
+    def prometheus_text(self) -> str:
+        """One Prometheus text page over every live metrics plane: the
+        service's own registry, the operator registry's lifecycle
+        counters, and each live entry's per-operator stats (labeled
+        `entry=<pattern_fp[:8]>`); see docs/observability.md."""
+        from ..obs.export import prometheus_text
+        sources: list = [self.stats.registry]
+        reg_metrics = getattr(self.registry, "metrics", None)
+        if reg_metrics is not None:
+            sources.append(reg_metrics)
+        for ekey, entry in list(self.registry.entries()):
+            op = entry.op
+            if op is not None:
+                sources.append((op.stats.registry,
+                                {"entry": ekey.pattern_fp[:8]}))
+        return prometheus_text(*sources)
 
     def wait_warm(self, timeout: float | None = None) -> bool:
         return self.registry.wait_warm(timeout)

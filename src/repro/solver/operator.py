@@ -78,7 +78,6 @@ directory — preserved for diagnosis, never silently deleted — with a
 from __future__ import annotations
 
 import collections
-import dataclasses
 import hashlib
 import os
 import pickle
@@ -90,6 +89,8 @@ from pathlib import Path
 
 import numpy as np
 
+from ..obs import trace as _obs
+from ..obs.metrics import MetricsRegistry
 from ..sparse.csr import CSR, reverse_both
 
 __all__ = ["TriangularOperator", "OperatorStats", "matrix_fingerprint",
@@ -197,79 +198,155 @@ def value_fingerprint(L: CSR) -> str:
     return h.hexdigest()[:16]
 
 
-@dataclasses.dataclass
 class OperatorStats:
-    """Mutable per-operator counters, updated by every solve().
+    """Per-operator stats plane: a VIEW over a `repro.obs` metrics
+    registry (prefix "repro_operator"), updated by every solve().
 
-    Updates are atomic per event: each solve/update/fallback commits its
-    counters under one internal lock, so concurrent `solve()` calls from a
+    Every field is backed by one instrument — Counter, Gauge, or Text —
+    in `self.registry`; reading a field reads the instrument, and
+    Prometheus/JSON export reads the SAME instruments, so there is no
+    second ledger to drift (docs/observability.md).  Updates are atomic
+    per event: each record_* call commits its instruments under the
+    registry's one shared lock, so concurrent `solve()` calls from a
     serving tier's worker threads never interleave a half-written record
-    (`solves` and `total_solve_ms` always describe the same set of solves,
-    which is what `repro.serving.ServiceStats` aggregation relies on).
-    Reads of individual fields stay lock-free — every field is always a
-    committed value; `to_dict()` snapshots the whole record consistently.
+    (`solves` and `total_solve_ms` always describe the same set of
+    solves, which is what `repro.serving.ServiceStats` aggregation
+    relies on).  Reads of individual fields are committed values;
+    `to_dict()` snapshots the whole record consistently.
+
+    Fallback counter semantics (made explicit after a double-count
+    hazard: the old single counter incremented per retry attempt while
+    its warning fired once per pair):
+
+    * `fallbacks` counts DOWNGRADED DISPATCHES — every oriented device
+      dispatch served by a non-requested engine.  A refined solve
+      dispatches its engine 1 + rounds times, so `fallbacks` can
+      legitimately exceed `solves` on a broken-engine operator; that is
+      attempt accounting, not double counting.
+    * `fallback_downgrades` counts UNIQUE (requested -> used) pairs —
+      exactly the events that emit an `EngineFallbackWarning` (which
+      warns once per pair).
     """
 
-    solves: int = 0
-    rhs_columns: int = 0
-    refine_rounds: int = 0
-    total_solve_ms: float = 0.0
-    last_solve_ms: float = 0.0
-    last_residual: float = float("nan")
-    # "built" | "memory" | "disk" | "pattern" (payload derived from an
-    # equal-pattern artifact via the refactorization fast path)
-    cache_source: str = "built"
-    tune_ms: float = 0.0
-    value_updates: int = 0             # update_values() calls served
-    last_update_ms: float = 0.0        # wall time of the last value update
-    fallbacks: int = 0                 # solves served by a downgraded engine
-    last_fallback: str = ""            # "requested->used"
-    health_events: int = 0             # health violations detected
-    last_health_event: str = ""        # "stage:action", e.g. "output:reference"
+    _COUNTER_FIELDS = (
+        ("solves", "host solve() calls completed"),
+        ("rhs_columns", "right-hand-side columns solved"),
+        ("refine_rounds", "iterative-refinement correction rounds"),
+        ("value_updates", "update_values() calls served"),
+        ("fallbacks", "downgraded engine dispatches (attempts)"),
+        ("fallback_downgrades", "unique requested->used engine downgrades"),
+        ("health_events", "health violations detected"),
+    )
+    _GAUGE_FIELDS = (
+        ("total_solve_ms", 0.0, "cumulative solve wall time (ms)"),
+        ("last_solve_ms", 0.0, "wall time of the last solve (ms)"),
+        ("last_residual", float("nan"),
+         "relative residual of the last solve"),
+        ("tune_ms", 0.0, "wall time of the tuner run behind the payload"),
+        ("last_update_ms", 0.0, "wall time of the last value update (ms)"),
+    )
+    _TEXT_FIELDS = (
+        # "built" | "memory" | "disk" | "pattern" (payload derived from
+        # an equal-pattern artifact via the refactorization fast path)
+        ("cache_source", "how the payload was obtained"),
+        ("last_fallback", "last downgrade as requested->used"),
+        ("last_health_event", "last health event as stage:action"),
+    )
+    # to_dict() key order: the historical field order, with the new
+    # fallback_downgrades riding directly after fallbacks
+    _FIELDS = ("solves", "rhs_columns", "refine_rounds", "total_solve_ms",
+               "last_solve_ms", "last_residual", "cache_source", "tune_ms",
+               "value_updates", "last_update_ms", "fallbacks",
+               "fallback_downgrades", "last_fallback", "health_events",
+               "last_health_event")
 
-    def __post_init__(self):
-        # a plain attribute, not a dataclass field: never serialized,
-        # never part of to_dict/equality
-        self._lock = threading.Lock()
+    def __init__(self, cache_source: str = "built", tune_ms: float = 0.0,
+                 registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None else \
+            MetricsRegistry(prefix="repro_operator")
+        r = self.registry
+        self._lock = r.lock
+        self._inst = {}
+        for name, help in self._COUNTER_FIELDS:
+            self._inst[name] = r.counter(name, help)
+        for name, default, help in self._GAUGE_FIELDS:
+            self._inst[name] = r.gauge(name, help, default=default)
+        for name, help in self._TEXT_FIELDS:
+            self._inst[name] = r.text(name, help)
+        self._inst["cache_source"].set(cache_source)
+        self._inst["tune_ms"].set(float(tune_ms))
 
     def to_dict(self) -> dict:
         with self._lock:
-            return {f.name: getattr(self, f.name)
-                    for f in dataclasses.fields(self)}
+            return {name: getattr(self, name) for name in self._FIELDS}
 
     # -- atomic mutation (one lock acquisition per event) ---------------------
     def record_solve(self, *, ms: float, columns: int, rounds: int,
                      residual: float) -> None:
         with self._lock:
-            self.solves += 1
-            self.rhs_columns += columns
-            self.refine_rounds += rounds
-            self.total_solve_ms += ms
-            self.last_solve_ms = ms
-            self.last_residual = residual
+            self._inst["solves"].inc()
+            self._inst["rhs_columns"].inc(columns)
+            self._inst["refine_rounds"].inc(rounds)
+            self._inst["total_solve_ms"].add(ms)
+            self._inst["last_solve_ms"].set(ms)
+            self._inst["last_residual"].set(residual)
 
-    def record_fallback(self, last: str) -> None:
+    def record_fallback(self, last: str, *, new_pair: bool = False) -> None:
+        """One downgraded dispatch; `new_pair` marks the first sighting
+        of this (requested, used) pair (class doc: attempts vs. unique
+        downgrades)."""
         with self._lock:
-            self.fallbacks += 1
-            self.last_fallback = last
+            self._inst["fallbacks"].inc()
+            if new_pair:
+                self._inst["fallback_downgrades"].inc()
+            self._inst["last_fallback"].set(last)
 
     def record_health_event(self, last: str = "") -> None:
         """Count a health violation; the action suffix is committed by
         record_health_action once the recovery path is known."""
         with self._lock:
-            self.health_events += 1
+            self._inst["health_events"].inc()
             if last:
-                self.last_health_event = last
+                self._inst["last_health_event"].set(last)
 
     def record_health_action(self, last: str) -> None:
-        with self._lock:
-            self.last_health_event = last
+        self._inst["last_health_event"].set(last)
 
     def record_value_update(self, *, ms: float, cache_source: str) -> None:
         with self._lock:
-            self.value_updates += 1
-            self.last_update_ms = ms
-            self.cache_source = cache_source
+            self._inst["value_updates"].inc()
+            self._inst["last_update_ms"].set(ms)
+            self._inst["cache_source"].set(cache_source)
+
+    def __repr__(self) -> str:    # pragma: no cover
+        return "OperatorStats(" + ", ".join(
+            f"{k}={v!r}" for k, v in self.to_dict().items()) + ")"
+
+
+def _stats_field_property(name: str) -> property:
+    """Field access for OperatorStats: reads/writes the backing
+    instrument (writes keep the old dataclass-style assignment working;
+    a counter write commits the delta so the monotonic series survives)."""
+
+    def _get(self):
+        return self._inst[name].value()
+
+    def _set(self, v):
+        inst = self._inst[name]
+        with self._lock:
+            if inst.kind == "counter":
+                inst.inc(v - inst.value())
+            else:
+                inst.set(v)
+
+    return property(_get, _set)
+
+
+for _name, *_rest in (OperatorStats._COUNTER_FIELDS
+                      + OperatorStats._GAUGE_FIELDS
+                      + OperatorStats._TEXT_FIELDS):
+    setattr(OperatorStats, _name, _stats_field_property(_name))
+del _name, _rest
 
 
 class TriangularOperator:
@@ -444,6 +521,8 @@ class TriangularOperator:
             op = cls(L, payload, cache_source=source)
             op._engine = eng        # the resolved instance, not a name
             op._build_kwargs = build_kwargs
+            _obs.event("operator.cache", source=source, n=L.n_rows,
+                       strategy=payload["strategy"])
             return op
 
         if cache:
@@ -469,22 +548,25 @@ class TriangularOperator:
         L_eff, reversed_ = orient_lower(L, side, bool(transpose))
         t0 = time.perf_counter()
         report = None
-        if tune == "auto":
-            tuner = portfolio if portfolio is not None else StrategyPortfolio(
-                chunk=chunk, max_deps=max_deps, dtype=dtype,
-                cost_model=cost_model, measure_top_k=measure_top_k,
-                engine=eng)
-            report = tuner.tune(L_eff)
-            best = report.best
-            ts, sched, label = best.ts, best.sched, best.label
-            report = report.slim()      # candidates keep stats, drop arrays
-        else:
-            strat = make_strategy(tune)
-            label = strategy_label(strat)
-            from ..core.transform import transform
-            ts = transform(L_eff, strat, validate=False, codegen=False)
-            sched = schedule_for_transformed(ts, chunk=chunk,
-                                             max_deps=max_deps, dtype=dtype)
+        with _obs.span("operator.tune", n=L.n_rows, tune=tune_key):
+            if tune == "auto":
+                tuner = portfolio if portfolio is not None else \
+                    StrategyPortfolio(
+                        chunk=chunk, max_deps=max_deps, dtype=dtype,
+                        cost_model=cost_model, measure_top_k=measure_top_k,
+                        engine=eng)
+                report = tuner.tune(L_eff)
+                best = report.best
+                ts, sched, label = best.ts, best.sched, best.label
+                report = report.slim()  # candidates keep stats, drop arrays
+            else:
+                strat = make_strategy(tune)
+                label = strategy_label(strat)
+                from ..core.transform import transform
+                ts = transform(L_eff, strat, validate=False, codegen=False)
+                sched = schedule_for_transformed(ts, chunk=chunk,
+                                                 max_deps=max_deps,
+                                                 dtype=dtype)
         payload = {"version": CACHE_VERSION, "strategy": label, "ts": ts,
                    "sched": sched, "report": report, "config": cfg,
                    "reversed": reversed_, "engine": eng.name,
@@ -611,25 +693,27 @@ class TriangularOperator:
                 f"new matrix values contain non-finite entries in {where}",
                 stage="input", where=where)
         t0 = time.perf_counter()
-        cache = bool(self._build_kwargs.get("cache", False))
-        cache_dir = self._build_kwargs.get("cache_dir")
-        pattern_key = self._pattern_cache_key(new_L, self._config)
-        key = f"{pattern_key}-{value_fingerprint(new_L)}"
-        payload, source = None, "pattern"
-        if cache:
-            payload = self._memory_get(key)
-            if payload is not None:
-                source = "memory"
-            else:
-                payload = self._disk_load(key, cache_dir)
-                if payload is not None:
-                    source = "disk"
-                    self._memory_put(key, payload)
-        if payload is None:
-            payload = self._derive_payload(self._payload, new_L)
+        with _obs.span("operator.update_values", n=self.n) as usp:
+            cache = bool(self._build_kwargs.get("cache", False))
+            cache_dir = self._build_kwargs.get("cache_dir")
+            pattern_key = self._pattern_cache_key(new_L, self._config)
+            key = f"{pattern_key}-{value_fingerprint(new_L)}"
+            payload, source = None, "pattern"
             if cache:
-                self._memory_put(key, payload)
-                self._disk_store(key, payload, cache_dir)
+                payload = self._memory_get(key)
+                if payload is not None:
+                    source = "memory"
+                else:
+                    payload = self._disk_load(key, cache_dir)
+                    if payload is not None:
+                        source = "disk"
+                        self._memory_put(key, payload)
+            if payload is None:
+                payload = self._derive_payload(self._payload, new_L)
+                if cache:
+                    self._memory_put(key, payload)
+                    self._disk_store(key, payload, cache_dir)
+            usp.set(source=source)
         self._L = new_L
         self._payload = payload
         self._ts = payload["ts"]
@@ -772,8 +856,10 @@ class TriangularOperator:
         cached = self._runtime["compiled"].get(engine.name)
         if cached is not None and cached[0] is engine:
             return cached[1]
-        fn = engine.compile(
-            compile_source(engine, self._sched, self._staged))
+        with _obs.span("engine.compile", engine=engine.name, n=self.n,
+                       steps=self._sched.num_steps):
+            fn = engine.compile(
+                compile_source(engine, self._sched, self._staged))
         self._runtime["compiled"][engine.name] = (engine, fn)
         return fn
 
@@ -937,7 +1023,8 @@ class TriangularOperator:
             try:
                 if not cand.available():
                     raise RuntimeError("engine reports unavailable")
-                x = self._oriented_solve(v, cand, out_dtype=out_dtype)
+                with _obs.span("engine.solve", engine=cand.name):
+                    x = self._oriented_solve(v, cand, out_dtype=out_dtype)
             except Exception as e:  # compile, lowering, or solve failure
                 reason = f"{type(e).__name__}: {e}"
                 failures[cand.name] = reason
@@ -950,10 +1037,17 @@ class TriangularOperator:
             f"TriangularOperator(n={self.n}, engine={eng.name!r})", attempts)
 
     def _note_fallback(self, requested, used, attempts) -> None:
-        self.stats.record_fallback(f"{requested.name}->{used.name}")
+        # warn once per (requested, used) pair; `fallbacks` counts every
+        # downgraded dispatch and `fallback_downgrades` only the first
+        # sighting of a pair, matching the warning (OperatorStats doc)
         warned = self._runtime.setdefault("warned_fallbacks", set())
         pair = (requested.name, used.name)
-        if pair not in warned:      # warn once per pair, count every event
+        new_pair = pair not in warned
+        self.stats.record_fallback(f"{requested.name}->{used.name}",
+                                   new_pair=new_pair)
+        _obs.event("engine.fallback", requested=requested.name,
+                   used=used.name, new_pair=new_pair)
+        if new_pair:
             warned.add(pair)
             from ..core.resilience import EngineFallbackWarning
             detail = "; ".join(f"{n}: {r}" for n, r in attempts)
@@ -973,6 +1067,7 @@ class TriangularOperator:
                                        NumericalHealthError, ResilienceError)
         policy, st = guard.policy, self.stats
         st.record_health_event()
+        _obs.event("health.violation", stage=stage, reason=reason)
         attempted = []
         if policy.on_nonfinite == "repair":
             attempted.append("repair")
@@ -1063,48 +1158,57 @@ class TriangularOperator:
         resid = float("nan")
         rounds = 0
         served_by_reference = False
-        try:
-            x, eng = self._fallback_solve(
-                b, eng, out_dtype=np.float64 if max_refine > 0 else None)
-        except EngineFallbackError:
-            # no device engine survived the chain; a recovering policy may
-            # still serve the solve from the host reference
-            if policy.on_nonfinite == "raise":
-                raise
-            self.stats.record_health_event("engine:reference")
-            warnings.warn(
-                "every engine in the fallback chain failed; solve served "
-                f"by the host reference in {guard.where}",
-                HealthRepairWarning, stacklevel=2)
-            x = self._reference_solve(b)
-            served_by_reference = True
-        if served_by_reference:
-            resid = self._relative_residual(b, x)
-        elif max_refine > 0:        # refinement off => skip the host matvec
-            bscale = max(1.0, float(np.abs(b).max(initial=0.0)))
-            while True:
-                r = b - self._L.matvec(x, transpose=self.transpose)
-                resid = float(np.abs(r).max(initial=0.0)) / bscale
-                if not np.isfinite(resid):
-                    break   # poisoned pipeline: corrections would be NaN
-                            # too — the health action below decides
-                if resid <= refine_tol or rounds >= max_refine:
-                    break
-                x = x + self._fallback_solve(r, eng, out_dtype=np.float64)[0]
-                rounds += 1
-        if not served_by_reference:
-            reason, stage = guard.output_unhealthy(x), "output"
-            if reason is None and policy.residual_check:
-                if not np.isfinite(resid):  # nan: unset (max_refine=0) or
-                    resid = self._relative_residual(b, x)   # poisoned
-                reason, stage = guard.residual_unhealthy(resid), "residual"
-            if reason is not None:
-                x, resid = self._health_recover(b, x, reason, stage, guard,
-                                                eng)
-        self.stats.record_solve(
-            ms=(time.perf_counter() - t0) * 1e3,
-            columns=1 if b.ndim == 1 else b.shape[1],
-            rounds=rounds, residual=resid)
+        with _obs.span("operator.solve", n=self.n, engine=eng.name,
+                       columns=1 if b.ndim == 1 else b.shape[1]) as sp:
+            try:
+                x, eng = self._fallback_solve(
+                    b, eng, out_dtype=np.float64 if max_refine > 0 else None)
+            except EngineFallbackError:
+                # no device engine survived the chain; a recovering policy
+                # may still serve the solve from the host reference
+                if policy.on_nonfinite == "raise":
+                    raise
+                self.stats.record_health_event("engine:reference")
+                warnings.warn(
+                    "every engine in the fallback chain failed; solve served "
+                    f"by the host reference in {guard.where}",
+                    HealthRepairWarning, stacklevel=2)
+                x = self._reference_solve(b)
+                served_by_reference = True
+            if served_by_reference:
+                resid = self._relative_residual(b, x)
+            elif max_refine > 0:    # refinement off => skip the host matvec
+                bscale = max(1.0, float(np.abs(b).max(initial=0.0)))
+                with _obs.span("operator.refine", tol=refine_tol) as rsp:
+                    while True:
+                        r = b - self._L.matvec(x, transpose=self.transpose)
+                        resid = float(np.abs(r).max(initial=0.0)) / bscale
+                        if not np.isfinite(resid):
+                            break   # poisoned pipeline: corrections would
+                                    # be NaN too — the health action below
+                                    # decides
+                        if resid <= refine_tol or rounds >= max_refine:
+                            break
+                        x = x + self._fallback_solve(
+                            r, eng, out_dtype=np.float64)[0]
+                        rounds += 1
+                    rsp.set(rounds=rounds, residual=resid)
+            if not served_by_reference:
+                reason, stage = guard.output_unhealthy(x), "output"
+                if reason is None and policy.residual_check:
+                    if not np.isfinite(resid):  # nan: unset (max_refine=0)
+                        resid = self._relative_residual(b, x)   # or poisoned
+                    reason, stage = guard.residual_unhealthy(resid), \
+                        "residual"
+                if reason is not None:
+                    x, resid = self._health_recover(b, x, reason, stage,
+                                                    guard, eng)
+            ms = (time.perf_counter() - t0) * 1e3
+            sp.set(ms=ms, rounds=rounds, engine_used=eng.name,
+                   reference=served_by_reference)
+            self.stats.record_solve(
+                ms=ms, columns=1 if b.ndim == 1 else b.shape[1],
+                rounds=rounds, residual=resid)
         return x
 
     def __repr__(self) -> str:  # pragma: no cover

@@ -291,3 +291,26 @@ def test_bench_schedule_fields(tmp_path):
                 assert field in m[side]
         assert "build_speedup_vs_legacy" in m
         assert "padded_flops_reduction" in m
+
+
+@pytest.mark.bench
+def test_bench_summary_matches_committed(tmp_path):
+    """PR 9 satellite: `write_bench_summary` distilled from the committed
+    BENCH artifacts must reproduce the committed
+    experiments/BENCH_summary.json exactly — the summary is a pure
+    function of the artifacts, so drift means someone edited one side."""
+    from pathlib import Path
+
+    from benchmarks.run import write_bench_summary
+
+    committed = Path("experiments/BENCH_summary.json")
+    assert committed.exists(), "run benchmarks.run (full) to regenerate"
+    out = tmp_path / "BENCH_summary.json"
+    rec = write_bench_summary(out_path=str(out))
+    assert rec is not None
+    assert json.loads(out.read_text()) == json.loads(committed.read_text())
+    # the summary's headline guarantees hold
+    assert all(m["batched_beats_sequential"]
+               for m in rec["serving"].values())
+    assert all(m["padded_flops_reduction"] > 0
+               for m in rec["schedule"].values())

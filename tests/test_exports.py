@@ -32,6 +32,11 @@ PACKAGES = [
     "repro.serving.batcher",
     "repro.serving.registry",
     "repro.serving.service",
+    "repro.obs",
+    "repro.obs.trace",
+    "repro.obs.metrics",
+    "repro.obs.profile",
+    "repro.obs.export",
 ]
 
 
