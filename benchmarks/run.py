@@ -167,6 +167,37 @@ def bench_schedule(out_path="experiments/BENCH_schedule.json",
     return record
 
 
+def verify_smoke(scales=(0.12, 0.08)) -> dict:
+    """Static-verification smoke over both benchmark analogues: transform
+    + schedule every registered strategy and certify each artifact
+    (`python -m benchmarks.run --verify`; the CI static-analysis job's
+    second gate).  Any invariant violation raises a typed
+    ScheduleInvariantError/TransformInvariantError and fails the run."""
+    from repro.analysis import certificate_dict, verify_level_schedule
+    from repro.analysis.verify import audit_transformed_system
+    from repro.core.portfolio import STRATEGY_REGISTRY, make_strategy
+    from repro.core.transform import transform
+    from repro.solver.schedule import schedule_for_transformed
+    from repro.sparse import generators
+    out: dict = {}
+    for name, L in ((f"lung2_like@{scales[0]}",
+                     generators.lung2_like(scales[0])),
+                    (f"torso2_like@{scales[1]}",
+                     generators.torso2_like(scales[1]))):
+        out[name] = {}
+        for strategy in STRATEGY_REGISTRY:
+            ts = transform(L, make_strategy(strategy), validate=False,
+                           codegen=False)
+            audit_transformed_system(ts, where=f"{name}/{strategy}")
+            cert = verify_level_schedule(
+                ts_sched := schedule_for_transformed(ts, chunk=256,
+                                                     max_deps=16),
+                ts.A, ts.diag, where=f"{name}/{strategy}")
+            assert cert.steps == ts_sched.num_steps
+            out[name][strategy] = certificate_dict(cert)
+    return out
+
+
 def engine_capability_smoke(n: int = 200) -> dict:
     """Solve one small system through every *available* registered engine
     (registry dispatch, pallas-interpret included) and check it against the
@@ -280,6 +311,16 @@ def main() -> None:
         rec = smoke(trace_dir=trace_dir)
         print(json.dumps(rec, indent=2))
         print(f"\nsmoke total {time.time() - t0:.1f}s")
+        return
+    if "--verify" in sys.argv:
+        t0 = time.time()
+        rec = verify_smoke()
+        for name, strategies in rec.items():
+            for strategy, cert in strategies.items():
+                print(f"{name:20s} {strategy:16s} steps={cert['steps']:>5} "
+                      f"critical_path={cert['critical_path']:>5} "
+                      f"padded_flops={cert['padded_flops']}")
+        print(f"\nall artifacts certified in {time.time() - t0:.1f}s")
         return
     from benchmarks import level_profiles, solver_bench, table1
     t0 = time.time()

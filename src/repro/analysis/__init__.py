@@ -1,0 +1,27 @@
+"""Static verification of compiled solve artifacts (docs/analysis.md).
+
+Two passes, both zero-execution:
+
+* `repro.analysis.verify` — the schedule race detector + invariant
+  certifier: vectorized O(nnz) structural checks over `LevelSchedule` /
+  `DeviceSchedule` (every dependency and carry segment produced strictly
+  earlier, lane/row bijection, index bounds, padding sentinels, dtype
+  flow, one collective family per sharded step) returning a typed
+  `ScheduleCertificate`, plus the transform auditor over
+  `TransformedSystem` / `ReplayPlan` commit logs.
+* `repro.analysis.lint` — the repo-rule AST lint (`python -m tools.lint`)
+  encoding the house invariants: no host callbacks in jit-traced loop
+  bodies, injected clocks only in the pure scheduling tiers, memo
+  mutation only under its lock, engines gate dtypes, no bare except.
+"""
+from .verify import (ScheduleCertificate, audit_transformed_system,
+                     certificate_dict, verify_level_schedule,
+                     verify_operator_payload, verify_schedule_values)
+from .lint import Finding, lint_paths, lint_source
+
+__all__ = [
+    "ScheduleCertificate", "audit_transformed_system", "certificate_dict",
+    "verify_level_schedule", "verify_operator_payload",
+    "verify_schedule_values",
+    "Finding", "lint_paths", "lint_source",
+]

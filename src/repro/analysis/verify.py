@@ -1,0 +1,671 @@
+"""Schedule race detector + invariant certifier (docs/analysis.md).
+
+The paper's premise is that the transformed dependency graph stays
+*equivalent* while gaining parallelism.  Dynamic checks (sampled solves
+against the host oracle, residual guards) can only catch a bad schedule
+after it has produced a wrong answer; this module proves the structural
+half statically, before anything executes:
+
+* `verify_level_schedule` — vectorized O(nnz) checks over a
+  `LevelSchedule` (or a `DeviceSchedule`, via its host back-pointer):
+  every ELL dependency and carry segment is produced at a strictly
+  earlier step (scheduling-race detection, split-row carry chains
+  included), every row is finalized exactly once (lane/row bijection),
+  every ELL / carry / value-plan index is in bounds with padding lanes
+  fully inert, the numeric payload is finite with `dinv` bitwise equal
+  to `1/diag` in the schedule dtype, width buckets are well-formed, and
+  (optionally) one collective family per step on the sharded lowering.
+  Returns a `ScheduleCertificate` carrying the *certified* quality
+  metrics — step count, critical-path length, cross-device edge count —
+  that BENCH_schedule and the cost model can cite from a verified
+  source.  Violations raise `ScheduleInvariantError` naming the check,
+  step, and lane.
+* `audit_transformed_system` — the transform auditor: triangularity of
+  the rewritten system, level monotonicity along every dependency edge,
+  fill accounting against `TransformMetrics`, T-factor source
+  monotonicity, and `ReplayPlan` commit bounds.  Violations raise
+  `TransformInvariantError`.
+* `verify_schedule_values` — the cheap value-only re-audit the
+  `update_values` refactorization fast path runs under strict health:
+  packed-nnz accounting, payload finiteness, and `dinv` agreement on a
+  structure that was already certified at build time.
+
+`solver.schedule.validate_schedule` is a thin shim over
+`verify_level_schedule` (one implementation); strict-mode operator
+builds call the verifier exactly once per built artifact and stash the
+certificate in the cached payload, so cache hits re-verify nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.resilience import ScheduleInvariantError, TransformInvariantError
+
+__all__ = [
+    "ScheduleCertificate", "certificate_dict", "verify_level_schedule",
+    "verify_schedule_values", "audit_transformed_system",
+    "verify_operator_payload",
+]
+
+#: checks verify_level_schedule runs, in order (certificate.checks)
+STRUCTURAL_CHECKS = (
+    "shape", "index-bounds", "padding", "bijection", "race", "carry-order",
+    "dtype", "value-plan",
+)
+VALUE_CHECKS = ("nnz", "finite", "dinv")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleCertificate:
+    """Proof-carrying summary of one verified LevelSchedule.
+
+    Every field is derived during verification, so citing it is citing a
+    *certified* quantity (docs/analysis.md lists the invariant catalog):
+
+    n / nnz:        system size and packed nonzero count (== matrix nnz).
+    steps:          certified step count — every dependency crosses a step
+                    boundary, so `steps` barriers are sufficient.
+    levels:         level count of the input assignment (steps <= levels
+                    for compacted schedules).
+    critical_path:  longest dependency chain through lanes and carry
+                    segments, in steps — no schedule for this lane split
+                    can use fewer steps, so `steps - critical_path` is the
+                    certified compaction slack.
+    cross_device_edges: dependency edges whose producer and consumer lanes
+                    live on different devices under block lane sharding
+                    over `devices` devices (0 when devices == 1) — the
+                    quantity the communication-avoiding partitioner must
+                    minimize.
+    devices:        device count the cross-device count was computed for.
+    n_carry:        carry slots (split-row chains).
+    group_widths:   ELL width buckets.
+    flops / padded_flops: real and padded work (== LevelSchedule.flops()/
+                    padded_flops(), re-derived from the verified tiles).
+    dtype:          schedule value dtype name.
+    collective_families: per-step all_gather families counted on the
+                    traced sharded lowering, or None when the collectives
+                    check was skipped (default; it requires a jax trace).
+    checks:         names of the checks that ran.
+    """
+
+    n: int
+    nnz: int
+    steps: int
+    levels: int
+    critical_path: int
+    cross_device_edges: int
+    devices: int
+    n_carry: int
+    group_widths: tuple
+    flops: int
+    padded_flops: int
+    dtype: str
+    collective_families: int | None
+    checks: tuple
+
+
+def certificate_dict(cert: ScheduleCertificate) -> dict:
+    """JSON-able view (BENCH_schedule's per-matrix `certificate` block)."""
+    d = dataclasses.asdict(cert)
+    d["group_widths"] = list(cert.group_widths)
+    d["checks"] = list(cert.checks)
+    return d
+
+
+def _host(sched):
+    """Unwrap a DeviceSchedule to its host LevelSchedule."""
+    return getattr(sched, "host", sched)
+
+
+def _fail(msg, *, check, step=-1, lane=-1, group=-1, where=""):
+    raise ScheduleInvariantError(msg, check=check, step=step, lane=lane,
+                                 group=group, where=where)
+
+
+def _first_bad(mask):
+    """(step, lane) of the first True in a (S, C[, D]) mask."""
+    idx = np.argwhere(mask)[0]
+    return int(idx[0]), int(idx[1])
+
+
+def _check_shapes(sched, where):
+    S = sched.num_steps
+    prev_w = 0
+    for gi, g in enumerate(sched.groups):
+        s, c = g.row_ids.shape
+        if s != S:
+            _fail(f"group {gi} has {s} steps, group 0 has {S}",
+                  check="shape", group=gi, where=where)
+        if g.dep_idx.shape != (s, c, g.width) or \
+                g.dep_coef.shape != g.dep_idx.shape or \
+                g.dinv.shape != (s, c):
+            _fail(f"group {gi} tile shapes disagree with width {g.width}: "
+                  f"dep_idx {g.dep_idx.shape}, dep_coef {g.dep_coef.shape}, "
+                  f"dinv {g.dinv.shape}", check="shape", group=gi,
+                  where=where)
+        if not 0 < g.width <= sched.max_deps:
+            _fail(f"group {gi} width {g.width} outside (0, max_deps="
+                  f"{sched.max_deps}]", check="shape", group=gi, where=where)
+        if g.width <= prev_w:
+            _fail(f"group widths not strictly increasing at group {gi} "
+                  f"({g.width} after {prev_w})", check="shape", group=gi,
+                  where=where)
+        prev_w = g.width
+        if (g.carry_in is None) != (g.carry_out is None):
+            _fail(f"group {gi} has only one of carry_in/carry_out",
+                  check="shape", group=gi, where=where)
+        if g.carry_in is not None and (g.carry_in.shape != (s, c) or
+                                       g.carry_out.shape != (s, c)):
+            _fail(f"group {gi} carry shapes {g.carry_in.shape}/"
+                  f"{g.carry_out.shape} != {(s, c)}", check="shape",
+                  group=gi, where=where)
+        if g.n != sched.n:
+            _fail(f"group {gi} n={g.n} != schedule n={sched.n}",
+                  check="shape", group=gi, where=where)
+
+
+def _check_bounds(sched, where):
+    n, nc = sched.n, sched.n_carry
+    for gi, g in enumerate(sched.groups):
+        for name, arr, hi in (("row_ids", g.row_ids, n),
+                              ("dep_idx", g.dep_idx, n)):
+            bad = (arr < 0) | (arr > hi)
+            if bad.any():
+                st, ln = _first_bad(bad if arr.ndim == 2 else bad.any(2))
+                _fail(f"{name} value {int(arr[bad][0])} outside [0, {hi}]",
+                      check="index-bounds", step=st, lane=ln, group=gi,
+                      where=where)
+        if g.carry_in is not None:
+            bad = (g.carry_in < 0) | (g.carry_in > nc)
+            if bad.any():
+                st, ln = _first_bad(bad)
+                _fail(f"carry_in slot {int(g.carry_in[bad][0])} outside "
+                      f"[0, {nc}]", check="index-bounds", step=st, lane=ln,
+                      group=gi, where=where)
+            bad = (g.carry_out < 0) | (g.carry_out > nc + 1) | \
+                (g.carry_out == nc)
+            if bad.any():
+                st, ln = _first_bad(bad)
+                _fail(f"carry_out slot {int(g.carry_out[bad][0])} outside "
+                      f"[0, {nc}) u {{sink {nc + 1}}} (slot {nc} is the "
+                      f"read-only zero slot)", check="index-bounds", step=st,
+                      lane=ln, group=gi, where=where)
+
+
+def _live_mask(sched, g):
+    live = g.row_ids != sched.n
+    if g.carry_out is not None:
+        live = live | (g.carry_out != sched.n_carry + 1)
+    return live
+
+
+def _check_padding(sched, where):
+    """Dead lanes are fully inert: no live coefficient, no dinv, and live
+    coefficients never gather the zero slot (row n) — a live coef on an
+    out-of-range row would read zero and silently corrupt the sum."""
+    n = sched.n
+    for gi, g in enumerate(sched.groups):
+        live = _live_mask(sched, g)
+        real = g.dep_coef != 0
+        bad = real & ~live[:, :, None]
+        if bad.any():
+            st, ln = _first_bad(bad.any(2))
+            _fail("nonzero dep_coef on a padding lane", check="padding",
+                  step=st, lane=ln, group=gi, where=where)
+        bad = real & (g.dep_idx == n)
+        if bad.any():
+            st, ln = _first_bad(bad.any(2))
+            _fail("live coefficient gathers the zero slot (row n)",
+                  check="padding", step=st, lane=ln, group=gi, where=where)
+        bad = (g.row_ids == n) & (g.dinv != 0)
+        if bad.any():
+            st, ln = _first_bad(bad)
+            _fail("nonzero dinv on a lane that finalizes no row",
+                  check="padding", step=st, lane=ln, group=gi, where=where)
+
+
+def _finalize_steps(sched, where):
+    """fin_step[row] = step finalizing the row; enforces the bijection."""
+    n = sched.n
+    seen = np.zeros(n, dtype=np.int64)
+    fin_step = np.full(n + 1, -1, dtype=np.int64)
+    for gi, g in enumerate(sched.groups):
+        fin = g.is_final
+        rows = g.row_ids[fin]
+        np.add.at(seen, rows, 1)
+        steps = np.broadcast_to(
+            np.arange(g.row_ids.shape[0])[:, None], g.row_ids.shape)[fin]
+        fin_step[rows] = steps
+    if (seen != 1).any():
+        row = int(np.argwhere(seen != 1)[0][0])
+        # locate the offending lane for the error message
+        for gi, g in enumerate(sched.groups):
+            hit = (g.row_ids == row) & g.is_final
+            if hit.any():
+                st, ln = _first_bad(hit)
+                _fail(f"row {row} finalized {int(seen[row])} times (first "
+                      f"duplicate lane shown)", check="bijection", step=st,
+                      lane=ln, group=gi, where=where)
+        _fail(f"row {row} finalized {int(seen[row])} times",
+              check="bijection", where=where)
+    return fin_step
+
+
+def _check_races(sched, fin_step, where):
+    """Every live dependency reads a row finalized at a STRICTLY earlier
+    step — the scheduling-race invariant compaction must preserve."""
+    for gi, g in enumerate(sched.groups):
+        real = g.dep_coef != 0
+        if not real.any():
+            continue
+        steps = np.arange(g.row_ids.shape[0])[:, None, None]
+        prod = fin_step[g.dep_idx]          # -1 for never-finalized rows
+        bad = real & (prod >= steps)
+        if bad.any():
+            st, ln = _first_bad(bad.any(2))
+            dep = int(g.dep_idx[bad][0])
+            _fail(f"dependency on row {dep} finalized at step "
+                  f"{int(fin_step[dep])} (not strictly earlier) — "
+                  f"scheduling race", check="race", step=st, lane=ln,
+                  group=gi, where=where)
+
+
+def _check_carry_order(sched, where):
+    """Carry chains: every slot written exactly once, every read strictly
+    after its write (split-row segments must land before the tail sums
+    them)."""
+    nc = sched.n_carry
+    if nc <= 0:
+        return
+    writes = np.zeros(nc, dtype=np.int64)
+    wstep = np.full(nc + 1, -1, dtype=np.int64)   # slot nc = zero slot
+    for g in sched.groups:
+        if g.carry_out is None:
+            continue
+        realw = g.carry_out != nc + 1
+        slots = g.carry_out[realw]
+        np.add.at(writes, slots, 1)
+        steps = np.broadcast_to(
+            np.arange(g.carry_out.shape[0])[:, None], g.carry_out.shape)
+        wstep[slots] = steps[realw]
+    # slot 0 may legitimately be unused on schedules without splits, but a
+    # double write is always a lost segment
+    if (writes > 1).any():
+        slot = int(np.argwhere(writes > 1)[0][0])
+        _fail(f"carry slot {slot} written {int(writes[slot])} times",
+              check="carry-order", where=where)
+    wstep[nc] = -1                                # zero slot: always ready
+    for gi, g in enumerate(sched.groups):
+        if g.carry_in is None:
+            continue
+        live = _live_mask(sched, g)
+        used = live & (g.carry_in != nc)
+        if not used.any():
+            continue
+        steps = np.arange(g.carry_in.shape[0])[:, None]
+        ws = wstep[g.carry_in]
+        bad = used & (ws < 0)
+        if bad.any():
+            st, ln = _first_bad(bad)
+            _fail(f"carry slot {int(g.carry_in[bad][0])} read but never "
+                  f"written", check="carry-order", step=st, lane=ln,
+                  group=gi, where=where)
+        bad = used & (ws >= steps)
+        if bad.any():
+            st, ln = _first_bad(bad)
+            slot = int(g.carry_in[bad][0])
+            _fail(f"carry slot {slot} read at or before its write step "
+                  f"{int(wstep[slot])} — split-row race", check="carry-order",
+                  step=st, lane=ln, group=gi, where=where)
+
+
+def _check_dtypes(sched, where):
+    dtype = np.dtype(sched.dtype)
+    if dtype.kind != "f":
+        _fail(f"schedule dtype {dtype} is not floating", check="dtype",
+              where=where)
+    for gi, g in enumerate(sched.groups):
+        if g.dep_coef.dtype != dtype or g.dinv.dtype != dtype:
+            _fail(f"group {gi} payload dtypes {g.dep_coef.dtype}/"
+                  f"{g.dinv.dtype} != schedule dtype {dtype}", check="dtype",
+                  group=gi, where=where)
+        for name, arr in (("row_ids", g.row_ids), ("dep_idx", g.dep_idx),
+                          ("carry_in", g.carry_in),
+                          ("carry_out", g.carry_out)):
+            if arr is not None and arr.dtype.kind not in "iu":
+                _fail(f"group {gi} {name} dtype {arr.dtype} is not integer",
+                      check="dtype", group=gi, where=where)
+
+
+def _check_value_plan(sched, where):
+    plan = sched.value_plan
+    if plan is None:
+        return
+    n = sched.n
+    lanes = sum(g.row_ids.size for g in sched.groups)
+    slots = sum(g.dep_idx.size for g in sched.groups)
+    if plan.ent_src is not None:
+        if plan.ent_src.shape != (plan.nnz,):
+            _fail(f"value-plan ent_src shape {plan.ent_src.shape} != "
+                  f"({plan.nnz},)", check="value-plan", where=where)
+        if plan.nnz and not ((plan.ent_src >= 0) &
+                             (plan.ent_src < plan.nnz)).all():
+            _fail("value-plan ent_src index outside [0, nnz)",
+                  check="value-plan", where=where)
+    if plan.coef_dst.shape != (plan.nnz,):
+        _fail(f"value-plan coef_dst shape {plan.coef_dst.shape} != "
+              f"({plan.nnz},)", check="value-plan", where=where)
+    if plan.nnz and (np.unique(plan.coef_dst).size != plan.nnz or
+                     not ((plan.coef_dst >= 0) &
+                          (plan.coef_dst < slots)).all()):
+        _fail("value-plan coef_dst is not an injection into the dep-slot "
+              "buffer", check="value-plan", where=where)
+    ln = plan.lane_slot.shape[0]
+    if plan.lane_row.shape[0] != ln or plan.lane_final.shape[0] != ln:
+        _fail("value-plan lane arrays disagree in length",
+              check="value-plan", where=where)
+    if ln and (np.unique(plan.lane_slot).size != ln or
+               not ((plan.lane_slot >= 0) & (plan.lane_slot < lanes)).all()):
+        _fail("value-plan lane_slot is not an injection into the lane "
+              "buffer", check="value-plan", where=where)
+    if ln and not ((plan.lane_row >= 0) & (plan.lane_row <= n)).all():
+        _fail("value-plan lane_row outside [0, n]", check="value-plan",
+              where=where)
+
+
+def _check_values(sched, A, diag, where):
+    """The value-level audit: packed-nnz accounting, payload finiteness,
+    dinv bitwise equal to 1/diag in the schedule dtype."""
+    packed = sum(int((g.dep_coef != 0).sum()) for g in sched.groups)
+    if A is not None:
+        want = int((np.asarray(A.data) != 0).sum())
+        if packed != want:
+            _fail(f"packed nnz {packed} != matrix nnz {want} — entries "
+                  f"lost or duplicated", check="nnz", where=where)
+    for gi, g in enumerate(sched.groups):
+        bad = ~np.isfinite(g.dep_coef)
+        if bad.any():
+            st, ln = _first_bad(bad.any(2))
+            _fail("non-finite dep_coef", check="finite", step=st, lane=ln,
+                  group=gi, where=where)
+        bad = ~np.isfinite(g.dinv)
+        if bad.any():
+            st, ln = _first_bad(bad)
+            _fail("non-finite dinv", check="finite", step=st, lane=ln,
+                  group=gi, where=where)
+    if diag is not None:
+        dtype = np.dtype(sched.dtype)
+        dinv_of = np.zeros(sched.n + 1, dtype=dtype)
+        if sched.n:
+            dinv_of[:sched.n] = 1.0 / np.asarray(diag, dtype=dtype)
+        for gi, g in enumerate(sched.groups):
+            fin = g.is_final
+            bad = fin & (g.dinv != dinv_of[g.row_ids])
+            if bad.any():
+                st, ln = _first_bad(bad)
+                row = int(g.row_ids[bad][0])
+                _fail(f"dinv disagrees with 1/diag[{row}] in {dtype}",
+                      check="dinv", step=st, lane=ln, group=gi, where=where)
+    return packed
+
+
+def _lane_devices(g, devices: int) -> np.ndarray:
+    """Device of each lane under the padded block sharding the sharded
+    engine uses (lane axis padded to a multiple of `devices`, split in
+    contiguous blocks)."""
+    c = g.row_ids.shape[1]
+    c_pad = -(-c // devices) * devices
+    return np.minimum(np.arange(c) // (c_pad // devices), devices - 1)
+
+
+def _critical_path_and_edges(sched, fin_step, devices: int):
+    """One pass over steps: longest dependency chain through lanes and
+    carry segments (in steps), and the cross-device dependency-edge count
+    under block lane sharding over `devices` devices."""
+    n, nc = sched.n, sched.n_carry
+    depth = np.zeros(n + 1, dtype=np.int64)        # row n: zero slot
+    cdepth = np.zeros(nc + 2, dtype=np.int64)
+    dev_of_row = np.zeros(n + 1, dtype=np.int64)
+    dev_of_carry = np.full(nc + 2, -1, dtype=np.int64)
+    cross = 0
+    lane_dev = [(_lane_devices(g, devices) if devices > 1 else None)
+                for g in sched.groups]
+    for s in range(sched.num_steps):
+        updates = []
+        for gi, g in enumerate(sched.groups):
+            real = g.dep_coef[s] != 0                  # (C, D)
+            dep_depth = np.where(real, depth[g.dep_idx[s]], 0).max(
+                axis=1, initial=0)
+            if g.carry_in is not None:
+                dep_depth = np.maximum(dep_depth, cdepth[g.carry_in[s]])
+            lane_depth = dep_depth + 1
+            if devices > 1:
+                dev = lane_dev[gi]
+                prod = np.where(real, dev_of_row[g.dep_idx[s]],
+                                dev[:, None])
+                cross += int((real & (prod != dev[:, None])).sum())
+                if g.carry_in is not None:
+                    cprod = dev_of_carry[g.carry_in[s]]
+                    cross += int(((cprod >= 0) & (cprod != dev)).sum())
+            updates.append((g, lane_depth))
+        for gi, (g, lane_depth) in enumerate(updates):
+            fin = g.is_final[s]
+            depth[g.row_ids[s][fin]] = lane_depth[fin]
+            if devices > 1:
+                dev_of_row[g.row_ids[s][fin]] = lane_dev[gi][fin]
+            if g.carry_out is not None:
+                w = g.carry_out[s] != nc + 1
+                cdepth[g.carry_out[s][w]] = lane_depth[w]
+                if devices > 1:
+                    dev_of_carry[g.carry_out[s][w]] = lane_dev[gi][w]
+    return int(depth[:n].max(initial=0)), cross
+
+
+def verify_collectives(sched, mesh=None, axis: str = "model") -> int:
+    """Trace the sharded lowering and certify one all_gather family per
+    step (the sharded engine's synchronization invariant).  Returns the
+    family count; requires jax, so it only runs when requested."""
+    from ..solver.distributed import count_all_gathers
+    g = count_all_gathers(_host(sched), mesh=mesh, axis=axis)
+    if g["families"] != g["steps"]:
+        _fail(f"sharded lowering issued collectives in {g['families']} of "
+              f"{g['steps']} steps — not one family per step ({g})",
+              check="collectives", where="verify_collectives")
+    return int(g["families"])
+
+
+def verify_level_schedule(sched, A=None, diag=None, *, devices: int = 1,
+                          collectives: bool = False, mesh=None,
+                          mesh_axis: str = "model",
+                          where: str = "verify_level_schedule"
+                          ) -> ScheduleCertificate:
+    """Statically verify a LevelSchedule/DeviceSchedule; return its
+    certificate.
+
+    A / diag:  the strict-lower matrix and diagonal the schedule was
+               compiled from — enables the packed-nnz and dinv-agreement
+               checks (structure-only verification runs without them).
+    devices:   compute `cross_device_edges` for block lane sharding over
+               this many devices (1 = single device, 0 edges).
+    collectives: additionally trace the sharded lowering and certify one
+               all_gather family per step (needs jax; off by default).
+    Raises ScheduleInvariantError (a ResilienceError) on the first
+    violation, naming the check, step, and lane.
+    """
+    sched = _host(sched)
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    checks = list(STRUCTURAL_CHECKS)
+    if sched.num_steps == 0 or not sched.groups:
+        if sched.n != 0:
+            _fail(f"empty schedule for n={sched.n}", check="bijection",
+                  where=where)
+        return ScheduleCertificate(
+            n=0, nnz=0, steps=0, levels=sched.num_levels, critical_path=0,
+            cross_device_edges=0, devices=devices, n_carry=sched.n_carry,
+            group_widths=(), flops=0, padded_flops=0,
+            dtype=np.dtype(sched.dtype).name if sched.groups else "float32",
+            collective_families=None, checks=tuple(checks))
+    _check_shapes(sched, where)
+    _check_bounds(sched, where)
+    _check_padding(sched, where)
+    fin_step = _finalize_steps(sched, where)
+    _check_races(sched, fin_step, where)
+    _check_carry_order(sched, where)
+    _check_dtypes(sched, where)
+    _check_value_plan(sched, where)
+    checks += list(VALUE_CHECKS)
+    packed = _check_values(sched, A, diag, where)
+    crit, cross = _critical_path_and_edges(sched, fin_step, devices)
+    fams = None
+    if collectives:
+        fams = verify_collectives(sched, mesh=mesh, axis=mesh_axis)
+        checks.append("collectives")
+    return ScheduleCertificate(
+        n=sched.n, nnz=packed, steps=sched.num_steps,
+        levels=sched.num_levels, critical_path=crit,
+        cross_device_edges=cross, devices=devices, n_carry=sched.n_carry,
+        group_widths=tuple(sched.group_widths), flops=sched.flops(),
+        padded_flops=sched.padded_flops(),
+        dtype=np.dtype(sched.dtype).name, collective_families=fams,
+        checks=tuple(checks))
+
+
+def verify_schedule_values(sched, A=None, diag=None, *,
+                           where: str = "verify_schedule_values") -> int:
+    """The value-only re-audit for pattern-frozen repacks: nnz accounting,
+    finiteness, dinv agreement — O(nnz), no structural re-verification
+    (the structure was certified when the pattern was built).  Returns the
+    packed nnz; raises ScheduleInvariantError on violation."""
+    return _check_values(_host(sched), A, diag, where)
+
+
+def audit_transformed_system(ts, *, where: str = "audit_transformed_system"
+                             ) -> dict:
+    """Statically audit a TransformedSystem + its ReplayPlan commit log.
+
+    Checks (docs/analysis.md): the rewritten dependency matrix is strictly
+    lower triangular; both level assignments are monotone along every
+    dependency edge (and recomputed never exceeds assigned); the fill
+    accounting matches TransformMetrics (nnz_A, nnz_T, num_levels_after,
+    rows_rewritten == committed rows); the T factor's references are
+    source-monotone (every entity reads entities of strictly smaller
+    source rows — what makes the preamble a triangular solve); the diagonal
+    is finite and nonzero; replay-plan commits index in bounds and target
+    strictly earlier levels, each row committed at most once.
+
+    Returns {"rows": n, "commits": len(commits), ...} audit facts; raises
+    TransformInvariantError on the first violation.
+    """
+    n = int(ts.diag.shape[0])
+    d = np.asarray(ts.diag)
+    if not np.isfinite(d).all() or (d == 0).any():
+        raise TransformInvariantError(
+            "diagonal contains zero or non-finite entries",
+            check="diagonal", where=where)
+    A = ts.A
+    if A.n_rows != n:
+        raise TransformInvariantError(
+            f"A has {A.n_rows} rows, diagonal has {n}", check="shape",
+            where=where)
+    rows = np.repeat(np.arange(n), np.diff(A.indptr))
+    if A.nnz and not (A.indices < rows).all():
+        p = int(np.argwhere(A.indices >= rows)[0][0])
+        raise TransformInvariantError(
+            f"entry ({int(rows[p])}, {int(A.indices[p])}) is not strictly "
+            f"lower triangular", check="triangularity", where=where)
+    for name, lof in (("assigned", ts.level_of_assigned),
+                      ("recomputed", ts.level_of_recomputed)):
+        if lof.shape[0] != n:
+            raise TransformInvariantError(
+                f"{name} level assignment has {lof.shape[0]} entries, "
+                f"system has {n}", check="level-monotonicity", where=where)
+        if A.nnz and not (lof[A.indices] < lof[rows]).all():
+            bad = np.argwhere(lof[A.indices] >= lof[rows])[0][0]
+            raise TransformInvariantError(
+                f"{name} levels non-monotone along edge "
+                f"({int(rows[bad])}, {int(A.indices[bad])})",
+                check="level-monotonicity", where=where)
+    if n and int(ts.level_of_recomputed.max()) > \
+            int(ts.level_of_assigned.max()):
+        raise TransformInvariantError(
+            "recomputed level count exceeds assigned",
+            check="level-monotonicity", where=where)
+    m = ts.metrics
+    if m.nnz_A != A.nnz or m.nnz_T != ts.T.nnz:
+        raise TransformInvariantError(
+            f"fill accounting drift: metrics say nnz_A={m.nnz_A}/"
+            f"nnz_T={m.nnz_T}, system has {A.nnz}/{ts.T.nnz}",
+            check="fill-accounting", where=where)
+    want_levels = int(ts.level_of_assigned.max()) + 1 if n else 0
+    if m.num_levels_after != want_levels:
+        raise TransformInvariantError(
+            f"metrics num_levels_after={m.num_levels_after}, assigned "
+            f"levels={want_levels}", check="fill-accounting", where=where)
+    T = ts.T
+    if T.nnz:
+        if ts.src.shape[0] != T.n_rows:
+            raise TransformInvariantError(
+                f"src maps {ts.src.shape[0]} entities, T has {T.n_rows}",
+                check="t-factor", where=where)
+        if not ((ts.src >= 0) & (ts.src < n)).all():
+            raise TransformInvariantError(
+                "entity source row outside [0, n)", check="t-factor",
+                where=where)
+        trows = np.repeat(np.arange(T.n_rows), np.diff(T.indptr))
+        if not (ts.src[T.indices] < ts.src[trows]).all():
+            raise TransformInvariantError(
+                "T-factor reference is not source-monotone (an entity "
+                "reads an entity of an equal or later source row) — the "
+                "preamble would not be a triangular solve",
+                check="t-factor", where=where)
+    plan = ts.plan
+    commits = 0
+    if plan is not None:
+        if plan.level_of0.shape[0] != n:
+            raise TransformInvariantError(
+                f"replay plan covers {plan.level_of0.shape[0]} rows, "
+                f"system has {n}", check="replay-bounds", where=where)
+        # re-commits are legal (EquationStore._commit_version): a strategy
+        # may move the same row again, but only ever DOWNWARD — each
+        # commit's target must be strictly below the row's current level
+        cur = {}
+        for k, (row, target) in enumerate(plan.commits):
+            if not 0 <= row < n:
+                raise TransformInvariantError(
+                    f"commit {k} rewrites row {row} outside [0, {n})",
+                    check="replay-bounds", where=where)
+            level = cur.get(row, int(plan.level_of0[row]))
+            if not 0 <= target < level:
+                raise TransformInvariantError(
+                    f"commit {k} moves row {row} to level {target}, not "
+                    f"strictly earlier than its level {level}",
+                    check="replay-bounds", where=where)
+            cur[row] = target
+        commits = len(plan.commits)
+        if m.rows_rewritten != commits:
+            raise TransformInvariantError(
+                f"metrics count {m.rows_rewritten} rewritten rows, replay "
+                f"plan commits {commits}", check="fill-accounting",
+                where=where)
+    return {"rows": n, "nnz_A": A.nnz, "nnz_T": T.nnz, "commits": commits,
+            "levels_assigned": want_levels}
+
+
+def verify_operator_payload(payload: dict, *, devices: int = 1,
+                            collectives: bool = False,
+                            where: str = "verify_operator_payload"
+                            ) -> ScheduleCertificate:
+    """Verify one TriangularOperator payload end to end: audit the
+    transformed system, then certify its schedule against ts.A/ts.diag.
+    The certificate is stashed under payload["certificate"], so cached
+    artifacts carry their proof and are never re-verified."""
+    ts = payload["ts"]
+    audit_transformed_system(ts, where=where)
+    cert = verify_level_schedule(payload["sched"], ts.A, ts.diag,
+                                 devices=devices, collectives=collectives,
+                                 where=where)
+    payload["certificate"] = cert
+    return cert

@@ -32,10 +32,21 @@ Error taxonomy
     │                            matrix whose sparsity pattern differs from
     │                            the frozen one; carries `.where` and
     │                            `.detail` (docs/refactorization.md)
-    └── AdmissionError           the serving tier rejected a request before
-                                 it entered a queue (per-tenant depth cap,
-                                 closed service); carries `.tenant`,
-                                 `.depth`, `.limit` (docs/serving.md)
+    ├── AdmissionError           the serving tier rejected a request before
+    │                            it entered a queue (per-tenant depth cap,
+    │                            closed service); carries `.tenant`,
+    │                            `.depth`, `.limit` (docs/serving.md)
+    ├── ScheduleInvariantError   a compiled LevelSchedule failed static
+    │                            verification (`repro.analysis.verify`):
+    │                            a scheduling race, a broken lane/row
+    │                            bijection, an out-of-bounds ELL index —
+    │                            carries `.check`, `.step`, `.lane`,
+    │                            `.group` (docs/analysis.md)
+    └── TransformInvariantError  a TransformedSystem / ReplayPlan failed the
+                                 transform audit (triangularity, level
+                                 monotonicity, fill accounting, replay
+                                 index bounds); carries `.check` and
+                                 `.where` (docs/analysis.md)
 
     ResilienceWarning(UserWarning)
     ├── EngineFallbackWarning    an engine was downgraded (never silent)
@@ -52,8 +63,9 @@ a named level (`"off" | "on" | "strict" | "repair" | "fallback"`), or
 `None` for the `REPRO_HEALTH_CHECKS` environment default (same names;
 unset means `"on"`).  `"on"` checks input/output finiteness and raises
 typed errors; `"strict"` additionally verifies the relative residual
-against the original matrix; `"repair"` / `"fallback"` recover instead of
-raising (docs/robustness.md walks every knob).
+against the original matrix and statically certifies compiled schedules
+via `repro.analysis.verify` (docs/analysis.md); `"repair"` / `"fallback"`
+recover instead of raising (docs/robustness.md walks every knob).
 """
 from __future__ import annotations
 
@@ -65,6 +77,7 @@ import numpy as np
 __all__ = [
     "ResilienceError", "NumericalHealthError", "EngineFallbackError",
     "PatternMismatchError", "AdmissionError",
+    "ScheduleInvariantError", "TransformInvariantError",
     "ResilienceWarning", "EngineFallbackWarning", "HealthRepairWarning",
     "CacheQuarantineWarning", "TunerFailureWarning",
     "HealthPolicy", "SolveGuard", "RetryPolicy", "resolve_health_policy",
@@ -161,6 +174,65 @@ class AdmissionError(ResilienceError):
         super().__init__(f"{message}{tail}")
 
 
+class ScheduleInvariantError(ResilienceError):
+    """A compiled schedule failed static verification.
+
+    Raised by `repro.analysis.verify.verify_level_schedule` (and through it
+    by `validate_schedule` and strict-mode operator builds) when a
+    `LevelSchedule` violates a structural invariant: a lane reads a row or
+    carry segment that is not finalized at a strictly earlier step, a row
+    is finalized more or fewer than exactly once, an ELL index or carry
+    slot is out of bounds, or the packed nnz disagrees with the matrix.
+    The schedule must never execute — a violating schedule can return a
+    *finite but wrong* answer (docs/analysis.md).
+
+    check: the invariant that failed (e.g. "race", "bijection",
+           "index-bounds", "carry-order", "nnz", "dtype", "collectives").
+    step:  the first offending step index (-1 when not step-local).
+    lane:  the first offending lane index within that step (-1 when not
+           lane-local).
+    group: the width-group index the lane belongs to (-1 when global).
+    """
+
+    def __init__(self, message: str, *, check: str, step: int = -1,
+                 lane: int = -1, group: int = -1, where: str = ""):
+        self.check = check
+        self.step = int(step)
+        self.lane = int(lane)
+        self.group = int(group)
+        self.where = where
+        loc = ""
+        if step >= 0:
+            loc = f" at step {step}"
+            if lane >= 0:
+                loc += f", lane {lane}"
+            if group >= 0:
+                loc += f" (group {group})"
+        head = f"{where}: " if where else ""
+        super().__init__(f"{head}[{check}] {message}{loc}")
+
+
+class TransformInvariantError(ResilienceError):
+    """A TransformedSystem or its ReplayPlan failed the transform audit.
+
+    Raised by `repro.analysis.verify.audit_transformed_system`: the
+    rewritten dependency matrix is not strictly lower triangular, a level
+    assignment is non-monotone along an edge, the fill accounting disagrees
+    with `TransformMetrics`, or a replay-plan commit indexes out of bounds.
+    Replaying or scheduling such a system would produce a finite wrong
+    answer, so the audit is an eager, typed error (docs/analysis.md).
+
+    check: the invariant that failed (e.g. "triangularity",
+           "level-monotonicity", "fill-accounting", "replay-bounds").
+    """
+
+    def __init__(self, message: str, *, check: str, where: str = ""):
+        self.check = check
+        self.where = where
+        head = f"{where}: " if where else ""
+        super().__init__(f"{head}[{check}] {message}")
+
+
 class ResilienceWarning(UserWarning):
     """Base class for resilience-layer warnings (downgrades are loud)."""
 
@@ -214,6 +286,13 @@ class HealthPolicy:
                       noise.
     max_repair_rounds: refinement rounds "repair" may spend before
                       escalating to the fallback.
+    verify_schedule:  statically verify compiled schedules and transform
+                      plans (`repro.analysis.verify`) before they serve a
+                      solve: operator builds certify the schedule once
+                      (cached artifacts keep their certificate, so cache
+                      hits re-verify nothing), value updates re-audit the
+                      numeric payload.  Violations raise
+                      ScheduleInvariantError / TransformInvariantError.
     """
 
     check_inputs: bool = True
@@ -222,6 +301,7 @@ class HealthPolicy:
     residual_check: bool = False
     residual_tol: float = 1e-5
     max_repair_rounds: int = 3
+    verify_schedule: bool = False
 
     def __post_init__(self):
         if self.on_nonfinite not in _NONFINITE_ACTIONS:
@@ -240,8 +320,9 @@ class HealthPolicy:
 
     @classmethod
     def strict(cls) -> "HealthPolicy":
-        """Finiteness + residual verification, violations raise."""
-        return cls(residual_check=True)
+        """Finiteness + residual + static schedule verification,
+        violations raise."""
+        return cls(residual_check=True, verify_schedule=True)
 
 
 _NAMED_POLICIES = {

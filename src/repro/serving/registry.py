@@ -162,16 +162,19 @@ class OperatorRegistry:
     max_entries: bound on live entries; admission past the bound evicts
                the least-recently-admitted idle entry (its disk-cache
                artifact survives, so re-admission is cheap).
+    clock:     injected time source for `admitted_at` stamps (defaults to
+               `time.perf_counter`; tests pass a synthetic clock).
     from_csr_kwargs: forwarded to every `TriangularOperator.from_csr`
                (cache=, cache_dir=, chunk=, engine=, mesh=, ...).
     """
 
     def __init__(self, *, tune="auto", untuned="no_rewriting",
                  tune_mode: str = "background", max_entries: int | None = None,
-                 **from_csr_kwargs):
+                 clock=time.perf_counter, **from_csr_kwargs):
         if tune_mode not in ("background", "sync", "off"):
             raise ValueError(
                 f"tune_mode must be background|sync|off, got {tune_mode!r}")
+        self._clock = clock
         self._tune = tune
         self._untuned = untuned
         self.tune_mode = tune_mode
@@ -242,7 +245,7 @@ class OperatorRegistry:
             if created:
                 try:
                     entry.note_values(L, value_fp)
-                    entry.admitted_at = time.perf_counter()
+                    entry.admitted_at = self._clock()
                     if self.tune_mode == "sync":
                         entry.op = self._build(L, self._tune, ekey)
                         entry.state = "hot"

@@ -329,6 +329,9 @@ def engine_fallbacks(engine) -> tuple:
 # -- registry -----------------------------------------------------------------
 
 _REGISTRY: dict[str, Engine] = {}
+# register_engine's exists-check + insert must be atomic under concurrent
+# registration (serving workers registering custom engines at startup)
+_REGISTRY_LOCK = threading.RLock()
 # bounded LRU: each retained instance pins its memoized lowerings, and a
 # process sweeping many device-subset meshes must not accumulate engines
 # (and their closed-over staged schedules) forever
@@ -369,10 +372,11 @@ def register_engine(engine: Engine, overwrite: bool = False) -> Engine:
     if not isinstance(engine.name, str) or not engine.name:
         raise TypeError(f"engine must carry a non-empty string name: "
                         f"{engine!r}")
-    if engine.name in _REGISTRY and not overwrite:
-        raise ValueError(f"engine {engine.name!r} already registered "
-                         f"(pass overwrite=True to replace)")
-    _REGISTRY[engine.name] = engine
+    with _REGISTRY_LOCK:
+        if engine.name in _REGISTRY and not overwrite:
+            raise ValueError(f"engine {engine.name!r} already registered "
+                             f"(pass overwrite=True to replace)")
+        _REGISTRY[engine.name] = engine
     return engine
 
 

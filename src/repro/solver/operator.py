@@ -438,8 +438,8 @@ class TriangularOperator:
                  max_deps: int = 16, dtype=np.float32, engine=None,
                  mesh=None, mesh_axis: str = "model",
                  cache: bool = True, cache_dir=None, portfolio=None,
-                 cost_model=None,
-                 measure_top_k: int = 0) -> "TriangularOperator":
+                 cost_model=None, measure_top_k: int = 0,
+                 health=None) -> "TriangularOperator":
         """Build (or load) the operator for triangular L.
 
         side/transpose: which sweep this operator performs — `side` names
@@ -474,6 +474,13 @@ class TriangularOperator:
                 the default one.  A custom portfolio's configuration is not
                 part of the cache key, so passing one disables caching for
                 that build.
+        health: health policy spec (same forms as solve()'s `health=`).
+                Under a policy with `verify_schedule` (the "strict" level),
+                the static verifier certifies the compiled artifact ONCE
+                per built payload — the `ScheduleCertificate` rides the
+                cached payload, so cache hits skip re-verification
+                (docs/analysis.md).  Not part of the cache key: verifying
+                does not change the artifact.
         """
         import dataclasses as _dc
         from ..core.portfolio import StrategyPortfolio, make_strategy
@@ -516,8 +523,17 @@ class TriangularOperator:
         # by the refactorization fast path below.
         pattern_key = cls._pattern_cache_key(L, cfg)
         key = f"{pattern_key}-{value_fingerprint(L)}"
+        from ..core.resilience import resolve_health_policy
+        policy = resolve_health_policy(health)
 
         def _finish(payload, source):
+            if policy.verify_schedule and "certificate" not in payload:
+                # once per built payload: the certificate rides the cached
+                # payload (memory + disk), so hits skip re-verification
+                from ..analysis.verify import verify_operator_payload
+                verify_operator_payload(
+                    payload,
+                    where=f"TriangularOperator.from_csr(n={L.n_rows})")
             op = cls(L, payload, cache_source=source)
             op._engine = eng        # the resolved instance, not a name
             op._build_kwargs = build_kwargs
@@ -571,6 +587,12 @@ class TriangularOperator:
                    "sched": sched, "report": report, "config": cfg,
                    "reversed": reversed_, "engine": eng.name,
                    "tune_ms": (time.perf_counter() - t0) * 1e3}
+        if policy.verify_schedule:
+            # certify BEFORE the payload is persisted so the certificate
+            # rides the disk artifact too — _finish then has nothing to do
+            from ..analysis.verify import verify_operator_payload
+            verify_operator_payload(
+                payload, where=f"TriangularOperator.from_csr(n={L.n_rows})")
         if cache:
             cls._memory_put(key, payload)
             cls._disk_store(key, payload, cache_dir)
@@ -708,11 +730,22 @@ class TriangularOperator:
                     if payload is not None:
                         source = "disk"
                         self._memory_put(key, payload)
-            if payload is None:
+            derived = payload is None
+            if derived:
                 payload = self._derive_payload(self._payload, new_L)
-                if cache:
-                    self._memory_put(key, payload)
-                    self._disk_store(key, payload, cache_dir)
+            if policy.verify_schedule:
+                # the structure was certified at build time; the fast path
+                # re-audits only what the value re-bind changed (transform
+                # replay facts + packed values/dinv) and fails BEFORE the
+                # operator mutates or the payload is cached
+                from ..analysis.verify import (audit_transformed_system,
+                                               verify_schedule_values)
+                audit_transformed_system(payload["ts"], where=where)
+                verify_schedule_values(payload["sched"], payload["ts"].A,
+                                       payload["ts"].diag, where=where)
+            if derived and cache:
+                self._memory_put(key, payload)
+                self._disk_store(key, payload, cache_dir)
             usp.set(source=source)
         self._L = new_L
         self._payload = payload
@@ -723,6 +756,28 @@ class TriangularOperator:
         self.stats.record_value_update(
             ms=(time.perf_counter() - t0) * 1e3, cache_source=source)
         return self
+
+    # -- static verification (docs/analysis.md) -------------------------------
+    @property
+    def certificate(self):
+        """The `ScheduleCertificate` this operator's payload carries, or
+        None when it was never verified (build without strict health and
+        no explicit verify() call)."""
+        return self._payload.get("certificate")
+
+    def verify(self, *, devices: int = 1, collectives: bool = False):
+        """Run the full static verifier on the compiled artifact now.
+
+        Audits the transformed system and certifies the schedule
+        regardless of health policy; returns the `ScheduleCertificate`
+        and stashes it on the payload (so a later strict-mode cache hit
+        skips re-verification).  Raises `ScheduleInvariantError` /
+        `TransformInvariantError` on violation.
+        """
+        from ..analysis.verify import verify_operator_payload
+        return verify_operator_payload(
+            self._payload, devices=devices, collectives=collectives,
+            where=f"TriangularOperator.verify(n={self.n})")
 
     # -- cache plumbing -------------------------------------------------------
     @classmethod

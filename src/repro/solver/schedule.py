@@ -749,47 +749,14 @@ def repack_schedule_values(sched: LevelSchedule, new_data: np.ndarray,
 
 
 def validate_schedule(sched: LevelSchedule, A: CSR, diag: np.ndarray) -> None:
-    """Structural audit: every gather reads a row finalized in an earlier
-    step, every carry slot is written strictly before it is read, every row
-    is finalized exactly once, and the packed nnz count matches A.  (The
-    value-level check — that the schedule solves the system — is the solve
-    tests' job.)  Raises AssertionError on violation."""
-    n = sched.n
-    fin_step = np.full(n + 1, -1, dtype=np.int64)
-    fin_seen = np.zeros(n, dtype=np.int64)
-    carry_step = np.full(sched.n_carry + 2, -1, dtype=np.int64)
-    fin_all = [g.is_final for g in sched.groups]    # derived (S, C) masks
-    for s in range(sched.num_steps):
-        for g, g_fin in zip(sched.groups, fin_all):
-            fin = g_fin[s]
-            live = fin if g.carry_out is None else \
-                fin | (g.carry_out[s] != sched.n_carry + 1)
-            deps = g.dep_idx[s]
-            # padding dep slots carry coef 0 (and may alias any row) — only
-            # slots with a live coefficient constitute reads
-            real = (g.dep_coef[s] != 0) & live[:, None]
-            assert (deps[real] < n).all(), "live coef on out-of-range row"
-            read_rows = deps[real]
-            if read_rows.size:
-                assert (fin_step[read_rows] >= 0).all(), "read of unsolved row"
-                assert (fin_step[read_rows] < s).all(), "same-step dependency"
-            if g.carry_in is not None:
-                cin = g.carry_in[s]
-                used = live & (cin != sched.n_carry)
-                if used.any():
-                    assert (carry_step[cin[used]] >= 0).all(), \
-                        "carry read-before-write"
-                    assert (carry_step[cin[used]] < s).all(), "same-step carry"
-            np.add.at(fin_seen, g.row_ids[s][fin], 1)
-        for g, g_fin in zip(sched.groups, fin_all):
-            # finalization visible from next step on
-            if g.carry_out is not None:
-                written = g.carry_out[s][g.carry_out[s] != sched.n_carry + 1]
-                carry_step[written] = s
-            fin_step[g.row_ids[s][g_fin[s]]] = s
-    assert (fin_seen == 1).all(), "row finalized != exactly once"
-    tot = sum(int((g.dep_coef != 0).sum()) for g in sched.groups)
-    assert tot == int((A.data != 0).sum()), "packed nnz != matrix nnz"
+    """Structural audit of a compiled schedule.  Thin shim over the full
+    verifier (`repro.analysis.verify.verify_level_schedule`), kept for the
+    historical call sites and tests; new code should call the verifier
+    directly and keep the returned `ScheduleCertificate`.  Raises
+    `ScheduleInvariantError` (a subclass of AssertionError is NOT used —
+    the typed resilience taxonomy is) on violation."""
+    from ..analysis.verify import verify_level_schedule
+    verify_level_schedule(sched, A, diag, where="validate_schedule")
 
 
 def schedule_for_csr(L: CSR, levels: LevelSets, chunk: int = 256,

@@ -1,0 +1,350 @@
+"""Static verifier suite (ISSUE 10 tentpole + satellites).
+
+Three layers:
+
+* acceptance — every strategy's compiled schedule certifies, and the
+  certificate's quality metrics agree with the schedule's own accounting
+  (`num_steps`, `flops`, `padded_flops`);
+* rejection — each manufactured static defect (step reorder, duplicate
+  row finalization, out-of-bounds ELL gather, corrupt replay plan) is
+  refused with a typed error naming the check/step/lane, both through the
+  pure mutators and (chaos-marked) through the `core.faults` injectors
+  wrapping a strict `from_csr` — i.e. BEFORE a solve could return a
+  finite wrong answer;
+* wiring — strict health verifies once per built payload, the
+  certificate rides the memory/disk cache, and the re-verification cost
+  on a warm cache is bounded (acceptance criterion: <= 10%).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from _optional_deps import given, settings, st
+from repro.analysis import (certificate_dict, verify_level_schedule,
+                            verify_schedule_values)
+from repro.analysis.verify import audit_transformed_system
+from repro.core import faults
+from repro.core.portfolio import make_strategy
+from repro.core.resilience import (ScheduleInvariantError,
+                                   TransformInvariantError)
+from repro.core.transform import transform
+from repro.solver import (TriangularOperator, solve_csr_seq,
+                          validate_schedule)
+from repro.solver.schedule import schedule_for_csr, schedule_for_transformed
+from repro.sparse import build_levels, generators
+from repro.sparse.csr import tril
+
+STRATEGIES = ("no_rewriting", "avgLevelCost", "constrained_avg",
+              "critical_path")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memory_cache():
+    TriangularOperator.clear_memory_cache()
+    yield
+    TriangularOperator.clear_memory_cache()
+
+
+def _build(L, strategy, chunk=64, max_deps=8):
+    ts = transform(L, make_strategy(strategy), validate=False, codegen=False)
+    sched = schedule_for_transformed(ts, chunk=chunk, max_deps=max_deps)
+    return ts, sched
+
+
+# -- acceptance ---------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_valid_schedules_certify(strategy):
+    L = generators.lung2_like(scale=0.08)
+    ts, sched = _build(L, strategy)
+    cert = verify_level_schedule(sched, ts.A, ts.diag)
+    assert cert.steps == sched.num_steps
+    assert cert.flops == sched.flops()
+    assert cert.padded_flops == sched.padded_flops()
+    assert cert.n == L.n_rows
+    assert cert.nnz == int((ts.A.data != 0).sum())
+    assert 0 < cert.critical_path <= cert.steps
+    assert cert.checks  # every structural + value pass ran
+
+
+@pytest.mark.parametrize("gen, kwargs", [
+    (generators.chain, dict(n=60)),
+    (generators.banded, dict(n=200, bandwidth=5)),
+    (generators.random_lower, dict(n=150, avg_offdiag=2.5, max_back=20)),
+])
+def test_untransformed_schedules_certify(gen, kwargs):
+    L = gen(**kwargs, seed=3)
+    sched = schedule_for_csr(L, build_levels(L), chunk=32, max_deps=4)
+    cert = verify_level_schedule(sched, tril(L, keep_diagonal=False),
+                                 L.diagonal_fast())
+    assert cert.steps == sched.num_steps
+    assert cert.padded_flops == sched.padded_flops()
+
+
+def test_certificate_dict_roundtrip():
+    L = generators.banded(n=100, bandwidth=4, seed=1)
+    sched = schedule_for_csr(L, build_levels(L), chunk=32, max_deps=4)
+    cert = verify_level_schedule(sched, tril(L, keep_diagonal=False),
+                                 L.diagonal_fast(), devices=4)
+    d = certificate_dict(cert)
+    assert d["steps"] == cert.steps
+    assert d["devices"] == 4
+    assert d["cross_device_edges"] == cert.cross_device_edges
+    assert isinstance(d["group_widths"], list)
+    import json
+    json.dumps(d)   # JSON-able end to end
+
+
+def test_transform_audit_accepts_all_strategies():
+    L = generators.lung2_like(scale=0.08)
+    for strategy in STRATEGIES:
+        ts = transform(L, make_strategy(strategy), validate=False,
+                       codegen=False)
+        facts = audit_transformed_system(ts)
+        assert facts["rows"] == L.n_rows
+        assert facts["nnz_A"] == ts.A.nnz
+
+
+# -- rejection: pure mutators -------------------------------------------------
+
+def _banded_sched():
+    L = generators.banded(n=200, bandwidth=5, seed=7)
+    return L, schedule_for_csr(L, build_levels(L), chunk=32, max_deps=4)
+
+
+def test_reordered_step_is_a_race():
+    L, sched = _banded_sched()
+    bad = faults.swap_schedule_steps(sched)
+    with pytest.raises(ScheduleInvariantError) as ei:
+        verify_level_schedule(bad, tril(L, keep_diagonal=False),
+                              L.diagonal_fast())
+    assert ei.value.check == "race"
+    assert ei.value.step >= 0 and ei.value.lane >= 0
+    assert "step" in str(ei.value)      # error names the location
+
+
+def test_duplicate_row_breaks_bijection():
+    L, sched = _banded_sched()
+    bad = faults.duplicate_schedule_row(sched)
+    with pytest.raises(ScheduleInvariantError) as ei:
+        verify_level_schedule(bad, tril(L, keep_diagonal=False),
+                              L.diagonal_fast())
+    assert ei.value.check == "bijection"
+    assert ei.value.step >= 0 and ei.value.lane >= 0
+
+
+def test_oob_index_is_caught():
+    L, sched = _banded_sched()
+    bad = faults.oob_schedule_index(sched)
+    with pytest.raises(ScheduleInvariantError) as ei:
+        verify_level_schedule(bad, tril(L, keep_diagonal=False),
+                              L.diagonal_fast())
+    assert ei.value.check == "index-bounds"
+    assert ei.value.step >= 0 and ei.value.lane >= 0
+
+
+def test_corrupt_plan_fails_transform_audit():
+    L = generators.banded(n=200, bandwidth=5, seed=7)
+    ts = transform(L, make_strategy("avgLevelCost"), validate=False,
+                   codegen=False)
+    for mode in ("target", "row"):
+        with pytest.raises(TransformInvariantError) as ei:
+            audit_transformed_system(faults.corrupt_plan(ts, mode))
+        assert ei.value.check == "replay-bounds"
+
+
+def test_poisoned_values_fail_value_checks():
+    L, sched = _banded_sched()
+    bad = faults.poison_schedule(sched)
+    with pytest.raises(ScheduleInvariantError) as ei:
+        verify_schedule_values(bad, tril(L, keep_diagonal=False),
+                               L.diagonal_fast())
+    assert ei.value.check in ("finite", "dinv")
+    wrong = faults.scale_schedule(sched, 2.0)
+    with pytest.raises(ScheduleInvariantError) as ei:
+        verify_schedule_values(wrong, tril(L, keep_diagonal=False),
+                               L.diagonal_fast())
+    assert ei.value.check == "dinv"
+
+
+def test_validate_schedule_shim_raises_typed():
+    L, sched = _banded_sched()
+    bad = faults.swap_schedule_steps(sched)
+    with pytest.raises(ScheduleInvariantError):
+        validate_schedule(bad, tril(L, keep_diagonal=False),
+                          L.diagonal_fast())
+
+
+# -- rejection: injectors through the strict build path (chaos) ---------------
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("injector, exc, check", [
+    (faults.reorder_schedule_step, ScheduleInvariantError, "race"),
+    (faults.duplicate_lane_row, ScheduleInvariantError, "bijection"),
+    (faults.oob_ell_index, ScheduleInvariantError, "index-bounds"),
+    (faults.corrupt_replay_plan, TransformInvariantError, "replay-bounds"),
+])
+def test_injected_defects_rejected_before_solve(injector, exc, check):
+    """Every static-defect class dies in from_csr(health='strict') — no
+    operator exists afterwards, so no solve can return a finite wrong
+    answer from the defective artifact."""
+    L = generators.banded(n=200, bandwidth=5, seed=7)
+    with injector() as count:
+        with pytest.raises(exc) as ei:
+            TriangularOperator.from_csr(L, "avgLevelCost", cache=False,
+                                        health="strict")
+        assert count["calls"] >= 1          # the fault actually fired
+    assert ei.value.check == check
+    if isinstance(ei.value, ScheduleInvariantError):
+        assert ei.value.step >= 0 and ei.value.lane >= 0
+
+
+@pytest.mark.chaos
+def test_defect_solves_finite_without_verifier():
+    """The threat model is real: a reordered schedule still SOLVES to a
+    finite (wrong) answer on the refinement-free serving path when
+    verification is off — only the verifier turns it into a typed
+    build-time rejection.  (Iterative refinement can repair a mild race
+    after the fact, which is exactly why the defect is silent.)"""
+    L = generators.banded(n=200, bandwidth=5, seed=7)
+    b = np.random.default_rng(0).standard_normal(L.n_rows)
+    x_ref = solve_csr_seq(L, b)
+    with faults.reorder_schedule_step():
+        op = TriangularOperator.from_csr(L, "no_rewriting", cache=False,
+                                         health="off")
+        x = np.asarray(op.solve(b, health="off", max_refine=0))
+    assert np.isfinite(x).all()
+    assert np.abs(x - x_ref).max() > 1e-3   # ...and silently wrong
+
+
+# -- strict wiring ------------------------------------------------------------
+
+def test_strict_build_certifies_and_caches(tmp_path):
+    L = generators.banded(n=200, bandwidth=5, seed=9)
+    op = TriangularOperator.from_csr(L, "no_rewriting", cache_dir=tmp_path,
+                                     health="strict")
+    cert = op.certificate
+    assert cert is not None and cert.steps == op._sched.num_steps
+    # memory hit reuses the stashed certificate (same object, no re-run)
+    op2 = TriangularOperator.from_csr(L, "no_rewriting", cache_dir=tmp_path,
+                                      health="strict")
+    assert op2.stats.cache_source == "memory"
+    assert op2.certificate is cert
+    # the certificate rides the DISK artifact too (verified pre-store)
+    TriangularOperator.clear_memory_cache()
+    op3 = TriangularOperator.from_csr(L, "no_rewriting", cache_dir=tmp_path,
+                                      health="strict")
+    assert op3.stats.cache_source == "disk"
+    assert op3.certificate is not None
+    assert op3.certificate.steps == cert.steps
+
+
+def test_default_build_skips_verification(tmp_path):
+    L = generators.banded(n=150, bandwidth=4, seed=2)
+    op = TriangularOperator.from_csr(L, "no_rewriting", cache_dir=tmp_path)
+    assert op.certificate is None
+    # explicit verify() works regardless of policy and stashes the proof
+    cert = op.verify(devices=2)
+    assert op.certificate is cert and cert.devices == 2
+
+
+def test_update_values_strict_verifies_values(tmp_path):
+    L = generators.banded(n=200, bandwidth=5, seed=4)
+    op = TriangularOperator.from_csr(L, "avgLevelCost", cache_dir=tmp_path,
+                                     health="strict")
+    b = np.random.default_rng(1).standard_normal(L.n_rows)
+    L2 = L.with_data(L.data * 1.7)
+    op.update_values(L2, health="strict")
+    x = np.asarray(op.solve(b))
+    assert np.abs(x - solve_csr_seq(L2, b)).max() < 1e-3
+    # a poisoned value repack dies in update_values, operator unchanged
+    with faults.corrupt_values_payload() as count:
+        with pytest.raises(ScheduleInvariantError) as ei:
+            op.update_values(L.with_data(L.data * 0.5), health="strict")
+    assert count["calls"] >= 1
+    assert ei.value.check in ("finite", "dinv")
+    x2 = np.asarray(op.solve(b))            # still bound to L2's values
+    assert np.abs(x2 - solve_csr_seq(L2, b)).max() < 1e-3
+
+
+def test_cached_strict_overhead_bounded(tmp_path):
+    """Acceptance criterion: verify overhead on a cached lung2 build is
+    <= 10% — strict cache hits reuse the stashed certificate instead of
+    re-verifying."""
+    L = generators.lung2_like(scale=0.3)
+    TriangularOperator.from_csr(L, "avgLevelCost", cache_dir=tmp_path,
+                                health="strict")    # warm + certified
+
+    def best_of(health, reps=7):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            op = TriangularOperator.from_csr(
+                L, "avgLevelCost", cache_dir=tmp_path, health=health)
+            best = min(best, time.perf_counter() - t0)
+            assert op.stats.cache_source == "memory"
+        return best
+
+    t_off = best_of(None)
+    t_strict = best_of("strict")
+    # 10% relative plus a 2ms absolute floor for scheduler/timer noise on
+    # a sub-millisecond cache hit
+    assert t_strict <= 1.10 * t_off + 2e-3, (t_strict, t_off)
+
+
+# -- property-based (hypothesis; skipped when not installed) ------------------
+
+@given(st.integers(20, 90), st.integers(0, 10**5),
+       st.sampled_from(STRATEGIES))
+@settings(max_examples=16, deadline=None)
+def test_property_accept_iff_oracle(n, seed, strategy):
+    """verifier-accepts <=> schedule-matches-oracle: a strict build (which
+    certifies the artifact) must solve to the sequential oracle."""
+    L = generators.random_lower(n, avg_offdiag=2.5, seed=seed, max_back=12)
+    op = TriangularOperator.from_csr(L, strategy, cache=False,
+                                     health="strict")
+    assert op.certificate is not None
+    b = np.random.default_rng(seed + 1).standard_normal(n)
+    x = np.asarray(op.solve(b))
+    x_ref = solve_csr_seq(L, b)
+    scale = max(1.0, np.abs(x_ref).max())
+    assert np.abs(x - x_ref).max() / scale < 5e-4
+
+
+@given(st.integers(20, 90), st.integers(0, 10**5))
+@settings(max_examples=16, deadline=None)
+def test_property_mutations_rejected(n, seed):
+    """Unconditional defect classes never certify, whatever the system."""
+    from hypothesis import assume
+    L = generators.random_lower(n, avg_offdiag=2.5, seed=seed, max_back=12)
+    sched = schedule_for_csr(L, build_levels(L), chunk=16, max_deps=4)
+    A, diag = tril(L, keep_diagonal=False), L.diagonal_fast()
+    try:
+        bad = faults.oob_schedule_index(sched)
+    except ValueError:
+        assume(False)       # diagonal-only system: nothing to corrupt
+    with pytest.raises(ScheduleInvariantError):
+        verify_level_schedule(bad, A, diag)
+    try:
+        bad = faults.duplicate_schedule_row(sched)
+    except ValueError:
+        return              # fully packed: no padding lane to duplicate on
+    with pytest.raises(ScheduleInvariantError):
+        verify_level_schedule(bad, A, diag)
+
+
+@given(st.integers(20, 120), st.integers(0, 10**5),
+       st.sampled_from([(16, 4), (64, 8)]))
+@settings(max_examples=16, deadline=None)
+def test_property_certificate_agrees_with_schedule(n, seed, cfg):
+    chunk, max_deps = cfg
+    L = generators.random_lower(n, avg_offdiag=2.5, seed=seed, max_back=12)
+    sched = schedule_for_csr(L, build_levels(L), chunk=chunk,
+                             max_deps=max_deps)
+    cert = verify_level_schedule(sched, tril(L, keep_diagonal=False),
+                                 L.diagonal_fast())
+    assert cert.steps == sched.num_steps
+    assert cert.flops == sched.flops()
+    assert cert.padded_flops == sched.padded_flops()
+    assert cert.critical_path <= cert.steps

@@ -291,6 +291,39 @@ def test_bench_schedule_fields(tmp_path):
                 assert field in m[side]
         assert "build_speedup_vs_legacy" in m
         assert "padded_flops_reduction" in m
+        # ISSUE 10 satellite: each matrix carries a certified block whose
+        # quality metrics agree with the 'after' schedule's own accounting
+        cert = m["certificate"]
+        assert cert["steps"] == m["after"]["steps"]
+        assert cert["padded_flops"] == m["after"]["padded_flops"]
+        assert cert["flops"] == m["after"]["real_flops"]
+        assert 0 < cert["critical_path"] <= cert["steps"]
+
+
+@pytest.mark.bench
+def test_committed_schedule_artifact_certified():
+    """The committed experiments/BENCH_schedule.json carries a
+    per-matrix `certificate` block (ISSUE 10 satellite) that is
+    self-consistent with the benchmarked 'after' schedule."""
+    from pathlib import Path
+
+    from repro.analysis.verify import STRUCTURAL_CHECKS, VALUE_CHECKS
+
+    src = Path("experiments/BENCH_schedule.json")
+    assert src.exists(), "run benchmarks.run (full) to regenerate"
+    data = json.loads(src.read_text())
+    assert data["matrices"], "empty schedule artifact"
+    for name, m in data["matrices"].items():
+        cert = m.get("certificate")
+        assert cert is not None, f"{name}: no certificate block"
+        assert cert["steps"] == m["after"]["steps"]
+        assert cert["padded_flops"] == m["after"]["padded_flops"]
+        assert cert["flops"] == m["after"]["real_flops"]
+        assert cert["n"] == m["n"]
+        assert 0 < cert["critical_path"] <= cert["steps"]
+        # every structural + value pass ran when the artifact was written
+        assert set(cert["checks"]) >= set(STRUCTURAL_CHECKS) | \
+            set(VALUE_CHECKS)
 
 
 @pytest.mark.bench

@@ -1,0 +1,53 @@
+#!/usr/bin/env python3
+"""Run the repo-rule lint (repro.analysis.lint) from the command line.
+
+    python -m tools.lint                 # lint src/repro (the default)
+    python -m tools.lint src tests       # explicit targets
+    python -m tools.lint --json          # machine-readable findings
+    python -m tools.lint --list-rules    # rule catalog
+
+Exit code 1 iff any unsuppressed finding remains.  CI runs this as the
+blocking `static-analysis` job (docs/analysis.md has the rule catalog and
+the `# lint: allow=<rule>` suppression syntax).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis.lint import (RULES, lint_paths,  # noqa: E402
+                                 render_report)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.lint", description="repo-rule static lint")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src/repro)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule:24s} {desc}")
+        return 0
+
+    paths = args.paths or [str(REPO_ROOT / "src" / "repro")]
+    findings = lint_paths(paths, root=REPO_ROOT)
+    if args.json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        print(render_report(findings))
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
